@@ -1,0 +1,49 @@
+"""Fig. 6: loss/gradient calculation runtime reduction per network.
+
+The paper reports loss-time reductions of 14.5/41.2/16.0/38.3/22.8/79.0 %
+and gradient-time reductions of 31.3/76.3/17.7/45.3/20.9/92.4 % across the
+evaluated CNNs.  We reproduce the per-network reduction from the analytical
+accelerator model over each network's stride>=2 layers.
+"""
+
+from __future__ import annotations
+
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.configs import paper_cnn       # noqa: E402
+from benchmarks import perfmodel          # noqa: E402
+
+
+def run(csv=True):
+    rows = []
+    for net, layers in paper_cnn.NETWORKS.items():
+        loss_bp = loss_tr = grad_bp = grad_tr = 0
+        for layer in layers:
+            d = paper_cnn.dims(layer)
+            rep = perfmodel.report(d)
+            loss_bp += rep.loss_bp["total"]
+            loss_tr += rep.loss_trad["total"]
+            grad_bp += rep.grad_bp["total"]
+            grad_tr += rep.grad_trad["total"]
+        rows.append({
+            "network": net,
+            "loss_reduction_pct": round(100 * (1 - loss_bp / loss_tr), 1),
+            "grad_reduction_pct": round(100 * (1 - grad_bp / grad_tr), 1),
+        })
+    avg_l = sum(r["loss_reduction_pct"] for r in rows) / len(rows)
+    avg_g = sum(r["grad_reduction_pct"] for r in rows) / len(rows)
+    rows.append({"network": "MEAN",
+                 "loss_reduction_pct": round(avg_l, 1),
+                 "grad_reduction_pct": round(avg_g, 1)})
+    if csv:
+        print("fig6_network,loss_reduction_pct,grad_reduction_pct")
+        for r in rows:
+            print(f"{r['network']},{r['loss_reduction_pct']},"
+                  f"{r['grad_reduction_pct']}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,46 @@
+"""Fig. 7: off-chip memory bandwidth occupation reduction.
+
+Paper: loss-calc reduction min 2.34% (SqueezeNet) .. max 54.63% (AlexNet);
+grad-calc reduction min 18.98% (ResNet) .. max 31.66% (AlexNet).
+Element-exact counting from the traffic accounting in repro.core.
+"""
+
+from __future__ import annotations
+
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.configs import paper_cnn       # noqa: E402
+from repro.core import bpim2col, im2col_ref  # noqa: E402
+
+
+def run(csv=True):
+    rows = []
+    for net, layers in paper_cnn.NETWORKS.items():
+        t_loss = o_loss = t_grad = o_grad = 0
+        for layer in layers:
+            d = paper_cnn.dims(layer)
+            tl = im2col_ref.reorg_traffic_elems_loss(d)
+            ol = bpim2col.bp_traffic_elems_loss(d)
+            t_loss += tl["offchip_stream"] + tl["reorg_read"] + tl["reorg_write"]
+            o_loss += ol["offchip_stream"]
+            tg = im2col_ref.reorg_traffic_elems_grad(d)
+            og = bpim2col.bp_traffic_elems_grad(d)
+            t_grad += tg["offchip_stream"] + tg["reorg_read"] + tg["reorg_write"]
+            o_grad += og["offchip_stream"]
+        rows.append({
+            "network": net,
+            "loss_offchip_reduction_pct": round(100 * (1 - o_loss / t_loss), 2),
+            "grad_offchip_reduction_pct": round(100 * (1 - o_grad / t_grad), 2),
+        })
+    if csv:
+        print("fig7_network,loss_offchip_reduction_pct,grad_offchip_reduction_pct")
+        for r in rows:
+            print(f"{r['network']},{r['loss_offchip_reduction_pct']},"
+                  f"{r['grad_offchip_reduction_pct']}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,70 @@
+"""Kernel microbenchmarks: wall-clock of the three conv backprop engines and
+the Pallas kernels (interpret mode) on CPU, plus derived bytes-moved ratios.
+
+interpret-mode wall-clock is NOT TPU performance; the derived columns
+(bytes/elements moved) are the hardware-independent quantities.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+sys.path.insert(0, "src")
+
+from repro.core import bpim2col, im2col_ref, phase_decomp   # noqa: E402
+from repro.core.im2col_ref import ConvDims                  # noqa: E402
+
+CASES = [
+    ConvDims(B=2, C=16, H_i=32, W_i=32, N=32, K_h=3, K_w=3, S=2, P_h=1, P_w=1),
+    ConvDims(B=2, C=32, H_i=28, W_i=28, N=32, K_h=3, K_w=3, S=2, P_h=1, P_w=1),
+    ConvDims(B=1, C=64, H_i=14, W_i=14, N=128, K_h=1, K_w=1, S=2, P_h=0, P_w=0),
+]
+
+
+def _t(fn, *args, reps=5):
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run(csv=True):
+    rng = np.random.RandomState(0)
+    rows = []
+    for d in CASES:
+        x = jnp.asarray(rng.randn(d.B, d.C, d.H_i, d.W_i), jnp.float32)
+        w = jnp.asarray(rng.randn(d.N, d.C, d.K_h, d.K_w), jnp.float32)
+        dy = jnp.asarray(rng.randn(d.B, d.N, d.H_o, d.W_o), jnp.float32)
+        t_trad = _t(jax.jit(lambda a, b: im2col_ref.input_grad_explicit(a, b, d)), dy, w)
+        t_bp = _t(jax.jit(lambda a, b: bpim2col.input_grad_implicit(a, b, d)), dy, w)
+        t_ph = _t(jax.jit(lambda a, b: phase_decomp.input_grad_phase(a, b, d)), dy, w)
+        tg_trad = _t(jax.jit(lambda a, b: im2col_ref.weight_grad_explicit(a, b, d)), x, dy)
+        tg_ph = _t(jax.jit(lambda a, b: phase_decomp.weight_grad_phase(a, b, d)), x, dy)
+        sparsity = bpim2col.lowered_sparsity_loss(d)
+        rows.append({
+            "case": f"{d.H_i}/{d.C}/{d.N}/{d.K_h}/{d.S}/{d.P_h}",
+            "dI_trad_us": round(t_trad, 1),
+            "dI_bp_gather_us": round(t_bp, 1),
+            "dI_phase_us": round(t_ph, 1),
+            "dI_speedup_phase": round(t_trad / t_ph, 2),
+            "dW_trad_us": round(tg_trad, 1),
+            "dW_phase_us": round(tg_ph, 1),
+            "dW_speedup_phase": round(tg_trad / tg_ph, 2),
+            "lowered_sparsity": round(sparsity, 3),
+        })
+    if csv:
+        print("kern_case,dI_trad_us,dI_bp_us,dI_phase_us,dI_spd,"
+              "dW_trad_us,dW_phase_us,dW_spd,sparsity")
+        for r in rows:
+            print(",".join(str(v) for v in r.values()))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,83 @@
+"""Table II: runtime of loss & gradient calculation for five conv layers.
+
+Compares the analytical accelerator model against the paper's published
+cycle counts, and reports measured wall-clock for the JAX engines
+(traditional explicit vs BP-im2col implicit vs phase-decomposed) on CPU.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+sys.path.insert(0, "src")
+
+from repro.configs import paper_cnn                         # noqa: E402
+from repro.core import bpim2col, im2col_ref, phase_decomp   # noqa: E402
+from benchmarks import perfmodel                            # noqa: E402
+
+# Paper Table II: (loss_bp, loss_trad_comp, loss_trad_reorg, grad_bp,
+#                  grad_trad_comp, grad_trad_reorg)
+PAPER = {
+    (224, 3, 64, 3, 2, 0): (8962102, 8929989, 37083360, 2416476, 2274645, 37083360),
+    (112, 64, 64, 3, 2, 1): (10310400, 10329856, 3798997, 9439744, 8905216, 3798997),
+    (56, 256, 512, 1, 2, 0): (9330688, 9125888, 15592964, 11653120, 11636736, 15592964),
+    (28, 244, 244, 3, 2, 1): (8081314, 8222247, 1657646, 8575509, 8089919, 1657646),
+    (14, 1024, 2048, 1, 2, 0): (11984896, 11059200, 6074461, 15278080, 15245312, 6074461),
+}
+
+
+def _time(fn, *args, reps=3):
+    jax.block_until_ready(fn(*args))          # compile + warmup
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run(csv=True):
+    rows = []
+    rng = np.random.RandomState(0)
+    for layer in paper_cnn.TABLE2_LAYERS:
+        d = paper_cnn.dims(layer)
+        rep = perfmodel.report(d)
+        p = PAPER[layer]
+        paper_loss_speedup = (p[1] + p[2]) / p[0]
+        paper_grad_speedup = (p[4] + p[5]) / p[3]
+
+        # wall-clock of the actual JAX engines (loss calc) on a reduced copy
+        ds = im2col_ref.ConvDims(B=1, C=min(d.C, 32), H_i=min(d.H_i, 56),
+                                 W_i=min(d.W_i, 56), N=min(d.N, 32),
+                                 K_h=d.K_h, K_w=d.K_w, S=d.S,
+                                 P_h=d.P_h, P_w=d.P_w)
+        dy = jnp.asarray(rng.randn(ds.B, ds.N, ds.H_o, ds.W_o), jnp.float32)
+        w = jnp.asarray(rng.randn(ds.N, ds.C, ds.K_h, ds.K_w), jnp.float32)
+        t_trad = _time(jax.jit(
+            lambda dy, w: im2col_ref.input_grad_explicit(dy, w, ds)), dy, w)
+        t_phase = _time(jax.jit(
+            lambda dy, w: phase_decomp.input_grad_phase(dy, w, ds)), dy, w)
+
+        rows.append({
+            "layer": "/".join(map(str, layer)),
+            "model_loss_speedup": round(rep.loss_speedup, 2),
+            "paper_loss_speedup": round(paper_loss_speedup, 2),
+            "model_grad_speedup": round(rep.grad_speedup, 2),
+            "paper_grad_speedup": round(paper_grad_speedup, 2),
+            "jax_loss_trad_us": round(t_trad, 1),
+            "jax_loss_phase_us": round(t_phase, 1),
+            "jax_speedup": round(t_trad / t_phase, 2),
+        })
+    if csv:
+        print("table2_layer,model_loss_spd,paper_loss_spd,model_grad_spd,"
+              "paper_grad_spd,jax_trad_us,jax_phase_us,jax_spd")
+        for r in rows:
+            print(",".join(str(v) for v in r.values()))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

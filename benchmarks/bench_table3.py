@@ -1,0 +1,43 @@
+"""Table III: prologue latency of the address-generation modules.
+
+Divider-chain model (Section C of perfmodel): the paper reports 51 cycles
+for the traditional stationary module and 68/51 for BP-im2col (stationary
+loss / gradient) plus 68 for the BP dynamic module in gradient mode.
+"""
+
+from __future__ import annotations
+
+import sys
+
+sys.path.insert(0, "src")
+
+from benchmarks import perfmodel          # noqa: E402
+
+PAPER = {
+    "traditional": {"loss": {"dynamic": 0, "stationary": 51},
+                    "grad": {"dynamic": 0, "stationary": 51}},
+    "bp_im2col": {"loss": {"dynamic": 0, "stationary": 68},
+                  "grad": {"dynamic": 68, "stationary": 51}},
+}
+
+
+def run(csv=True):
+    model = perfmodel.prologue_latency()
+    rows = []
+    for algo in ("traditional", "bp_im2col"):
+        for calc in ("loss", "grad"):
+            for mod in ("dynamic", "stationary"):
+                rows.append({
+                    "module": f"{algo}/{calc}/{mod}",
+                    "model_cycles": model[algo][calc][mod],
+                    "paper_cycles": PAPER[algo][calc][mod],
+                })
+    if csv:
+        print("table3_module,model_cycles,paper_cycles")
+        for r in rows:
+            print(f"{r['module']},{r['model_cycles']},{r['paper_cycles']}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

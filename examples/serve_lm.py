@@ -1,0 +1,28 @@
+"""Batched serving example: wave-batched greedy decode with a KV cache.
+
+    PYTHONPATH=src python examples/serve_lm.py --arch mamba2-370m
+    PYTHONPATH=src python examples/serve_lm.py --arch smollm-360m --requests 12
+"""
+
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch import serve as S
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=16)
+    args = ap.parse_args()
+    done = S.main(["--arch", args.arch, "--requests", str(args.requests),
+                   "--max-new", str(args.max_new)])
+    assert all(len(r.out) == args.max_new for r in done)
+    print(f"[serve_lm] {len(done)} requests served")
+
+
+if __name__ == "__main__":
+    main()

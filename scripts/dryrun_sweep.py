@@ -1,0 +1,98 @@
+#!/usr/bin/env python
+"""Drive the dry-run sweep: one subprocess per (arch x shape) cell.
+
+Per-cell isolation means one pathological compile can't kill the sweep; a
+cell that exceeds --timeout with unrolled scan is retried in scan mode
+(compile/memory/collectives still recorded; flops marked undercounted).
+
+Usage:
+  python scripts/dryrun_sweep.py [--multi-pod] [--unroll 9999] [--timeout 1800]
+"""
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs import all_arch_ids, get_config          # noqa: E402
+from repro.configs.base import applicable_shapes            # noqa: E402
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def cell_cost(arch, shape):
+    cfg = get_config(arch)
+    return cfg.n_layers * (2 if cfg.n_experts else 1)
+
+
+def run(arch, shape, multi_pod, unroll, timeout):
+    env = dict(os.environ)
+    env["REPRO_SCAN_UNROLL"] = str(unroll)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    cmd = [sys.executable, "-m", "repro.launch.dryrun",
+           "--arch", arch, "--shape", shape]
+    if multi_pod:
+        cmd.append("--multi-pod")
+    t0 = time.time()
+    try:
+        r = subprocess.run(cmd, env=env, timeout=timeout,
+                           capture_output=True, text=True, cwd=ROOT)
+        ok = r.returncode == 0
+        msg = (r.stdout + r.stderr).strip().splitlines()
+        return ok, time.time() - t0, (msg[-3:] if msg else [])
+    except subprocess.TimeoutExpired:
+        return None, time.time() - t0, ["TIMEOUT"]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--unroll", type=int, default=9999)
+    ap.add_argument("--timeout", type=int, default=2400)
+    ap.add_argument("--only-arch", default=None)
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    cells = []
+    for a in all_arch_ids():
+        if args.only_arch and a != args.only_arch:
+            continue
+        for s in applicable_shapes(get_config(a)):
+            cells.append((a, s))
+    cells.sort(key=lambda c: cell_cost(*c))
+
+    mesh_name = "2x16x16" if args.multi_pod else "16x16"
+    summary = []
+    for i, (a, s) in enumerate(cells):
+        report = os.path.join(ROOT, "reports", "dryrun",
+                              f"{a}__{s}__{mesh_name}.json")
+        if args.skip_existing and os.path.exists(report):
+            print(f"=== [{i+1}/{len(cells)}] {a} {s} SKIP (exists)",
+                  flush=True)
+            continue
+        print(f"=== [{i+1}/{len(cells)}] {a} {s} "
+              f"(multi_pod={args.multi_pod}, unroll={args.unroll})",
+              flush=True)
+        ok, dt, tail = run(a, s, args.multi_pod, args.unroll, args.timeout)
+        if ok is None and args.unroll > 1:
+            print(f"    timeout after {dt:.0f}s; retry scan-mode", flush=True)
+            ok, dt, tail = run(a, s, args.multi_pod, 1, args.timeout)
+            tail.append("flops-undercounted(scan-mode)")
+        status = "OK" if ok else "FAIL"
+        print(f"    {status} {dt:.0f}s :: " + " | ".join(tail), flush=True)
+        summary.append({"arch": a, "shape": s, "ok": bool(ok),
+                        "seconds": round(dt, 1), "tail": tail})
+        mode = "multipod" if args.multi_pod else "singlepod"
+        with open(os.path.join(ROOT, "reports", f"sweep_{mode}.json"),
+                  "w") as f:
+            json.dump(summary, f, indent=2)
+    n_ok = sum(1 for s in summary if s["ok"])
+    print(f"=== sweep done: {n_ok}/{len(summary)} OK", flush=True)
+
+
+if __name__ == "__main__":
+    main()

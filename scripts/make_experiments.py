@@ -1,0 +1,64 @@
+#!/usr/bin/env python
+"""Assemble the generated tables for EXPERIMENTS.md from reports/.
+
+Prints markdown for: §Dry-run (per-cell compile/memory summary for both
+meshes) and §Roofline (three-term table).  The hand-written analysis and
+§Perf iteration log live in EXPERIMENTS.md itself; this script's output is
+pasted into the marked sections at finalization.
+"""
+
+import glob
+import json
+import os
+import sys
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, ROOT)
+sys.path.insert(0, os.path.join(ROOT, "src"))
+
+from benchmarks import roofline                     # noqa: E402
+
+
+def dryrun_table(mesh_filter=None, baseline_only=True):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(ROOT, "reports", "dryrun",
+                                              "*.json"))):
+        with open(path) as f:
+            c = json.load(f)
+        if mesh_filter and c["mesh"] != mesh_filter:
+            continue
+        base = os.path.basename(path)[:-5]
+        if baseline_only and (c.get("policy", "tp") != "tp"
+                              or c.get("window_skip", False)
+                              or base.count("__") > 2):
+            continue
+        mem = c["memory"]
+        per_dev_temp = (mem["temp_size_in_bytes"] or 0) / c["n_devices"]
+        args_b = (mem["argument_size_in_bytes"] or 0)
+        rows.append({
+            "arch": c["arch"], "shape": c["shape"], "mesh": c["mesh"],
+            "compile_s": c["compile_s"],
+            "flops": c["flops"],
+            "coll_total": c["collective_bytes"]["total"],
+            "temp_gb_per_dev": per_dev_temp / 2**30,
+            "args_gb_total": args_b / 2**30,
+        })
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    out = ["| arch | shape | mesh | compile (s) | HLO FLOPs (global) | "
+           "collective B/dev | temp GiB/dev | args GiB |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+                   f"| {r['compile_s']} | {r['flops']:.3e} "
+                   f"| {r['coll_total']:.3e} | {r['temp_gb_per_dev']:.2f} "
+                   f"| {r['args_gb_total']:.1f} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    print("## Generated: single-pod dry-run (16x16)\n")
+    print(dryrun_table("16x16"))
+    print("\n## Generated: multi-pod dry-run (2x16x16)\n")
+    print(dryrun_table("2x16x16"))
+    print("\n## Generated: roofline table\n")
+    print(roofline.markdown())

@@ -1,0 +1,55 @@
+"""Config registry: ``get_config(name)`` / ``get_smoke_config(name)``.
+
+One module per assigned architecture (exact published dims) plus the paper's
+own CNN workloads (``paper_cnn``).
+"""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import ArchConfig, ShapeCfg, SHAPES, applicable_shapes
+
+ARCH_IDS = [
+    "deepseek_v3_671b",
+    "moonshot_v1_16b_a3b",
+    "recurrentgemma_9b",
+    "internvl2_76b",
+    "smollm_360m",
+    "phi4_mini_3_8b",
+    "minicpm_2b",
+    "granite_3_8b",
+    "hubert_xlarge",
+    "mamba2_370m",
+]
+
+# CLI ids (dashes) -> module names
+ALIASES = {a.replace("_", "-"): a for a in ARCH_IDS}
+ALIASES.update({
+    "deepseek-v3-671b": "deepseek_v3_671b",
+    "moonshot-v1-16b-a3b": "moonshot_v1_16b_a3b",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+    "internvl2-76b": "internvl2_76b",
+    "smollm-360m": "smollm_360m",
+    "phi4-mini-3.8b": "phi4_mini_3_8b",
+    "minicpm-2b": "minicpm_2b",
+    "granite-3-8b": "granite_3_8b",
+    "hubert-xlarge": "hubert_xlarge",
+    "mamba2-370m": "mamba2_370m",
+})
+
+
+def get_config(name: str) -> ArchConfig:
+    mod_name = ALIASES.get(name, name)
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.FULL
+
+
+def get_smoke_config(name: str) -> ArchConfig:
+    mod_name = ALIASES.get(name, name)
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.SMOKE
+
+
+def all_arch_ids() -> list[str]:
+    return list(ARCH_IDS)

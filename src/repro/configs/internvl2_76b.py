@@ -1,0 +1,30 @@
+"""internvl2-76b [vlm] — arXiv:2404.16821.
+
+LLM backbone: 80L d_model=8192 64H (GQA kv=8) d_ff=28672 vocab=128256.
+Vision frontend (InternViT-6B) is a STUB per the assignment: input_specs
+provides precomputed patch embeddings (d_frontend=3200) which a projector
+maps into the LM sequence.  The projector's patch-embedding conv path is the
+BP-im2col showcase for stride=patch-size convolutions.
+"""
+
+from repro.configs.base import ArchConfig
+
+FULL = ArchConfig(
+    name="internvl2-76b",
+    family="vlm",
+    n_layers=80,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=28672,
+    vocab=128256,
+    frontend="vision",
+    d_frontend=3200,
+    frontend_tokens=256,
+    param_dtype="bfloat16",
+    act_dtype="bfloat16",
+)
+
+SMOKE = FULL.reduced(name="internvl2-76b-smoke",
+                     param_dtype="float32", act_dtype="float32")

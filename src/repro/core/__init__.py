@@ -1,0 +1,7 @@
+"""Core: the paper's contribution — BP-im2col implicit backprop lowering."""
+
+from repro.core.im2col_ref import ConvDims
+from repro.core.conv import conv2d, conv1d, depthwise_causal_conv1d, make_dims
+
+__all__ = ["ConvDims", "conv2d", "conv1d", "depthwise_causal_conv1d",
+           "make_dims"]

@@ -1,0 +1,270 @@
+"""Traditional (explicit) im2col with zero-space materialization.
+
+This module is the paper's baseline ("Original" legend): backprop through a
+convolutional layer realized by *physically* zero-inserting / zero-padding the
+compact tensors, im2col-lowering them into an explicit matrix copy, and running
+a GEMM.  It doubles as the executable oracle against which the implicit
+BP-im2col paths (`bpim2col.py`, `phase_decomp.py`, Pallas kernels) are tested.
+
+Layout conventions (match the paper):
+  inputs    I   : (B, C, H_i, W_i)      NCHW
+  kernels   W   : (N, C, K_h, K_w)      OIHW
+  outputs   Y   : (B, N, H_o, W_o)
+
+Forward lowering (inference):
+  matrix A (dynamic)    : (B*H_o*W_o, C*K_h*K_w)   -- im2col of padded input
+  matrix B (stationary) : (C*K_h*K_w, N)           -- reshaped kernel
+  Y = A @ B
+
+Loss calculation (transposed conv, Eq. (1) middle):
+  dI = conv(zero_insert_pad(dY), rot180(W).swap(N, C)), stride 1.
+
+Gradient calculation (dilated conv, Eq. (1) bottom):
+  dW = conv(Tr(pad(I)), Tr(zero_insert(dY))), stride 1 -- contraction over B.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvDims:
+    """Static geometry of one convolutional layer (paper Table I symbols)."""
+
+    B: int       # batch
+    C: int       # input channels
+    H_i: int     # input height
+    W_i: int     # input width
+    N: int       # output channels
+    K_h: int     # kernel height
+    K_w: int     # kernel width
+    S: int = 1   # stride (same both dims, as in the paper)
+    P_h: int = 0
+    P_w: int = 0
+
+    @property
+    def H_o(self) -> int:
+        return (self.H_i + 2 * self.P_h - self.K_h) // self.S + 1
+
+    @property
+    def W_o(self) -> int:
+        return (self.W_i + 2 * self.P_w - self.K_w) // self.S + 1
+
+    # Zero-inserted sizes (Table I): H_o'' / W_o''
+    @property
+    def H_o2(self) -> int:
+        return self.H_o + (self.H_o - 1) * (self.S - 1)
+
+    @property
+    def W_o2(self) -> int:
+        return self.W_o + (self.W_o - 1) * (self.S - 1)
+
+    # Zero-inserted AND zero-padded sizes (Table I): H_o''' / W_o'''
+    # (+R: general-tiling correction, zero under the paper's assumptions)
+    @property
+    def H_o3(self) -> int:
+        return self.H_o2 + 2 * (self.K_h - 1 - self.P_h) + self.R_h
+
+    @property
+    def W_o3(self) -> int:
+        return self.W_o2 + 2 * (self.K_w - 1 - self.P_w) + self.R_w
+
+    # Tiling remainder: rows/cols of the input that no forward window covers
+    # (the paper's formulas assume R == 0, but its own Table II layer 1,
+    # 224/3/64/3/2/0, has R == 1 -- we support the general case).
+    @property
+    def R_h(self) -> int:
+        return self.H_i + 2 * self.P_h - self.K_h - (self.H_o - 1) * self.S
+
+    @property
+    def R_w(self) -> int:
+        return self.W_i + 2 * self.P_w - self.K_w - (self.W_o - 1) * self.S
+
+    def validate(self) -> None:
+        assert self.H_o >= 1 and self.W_o >= 1
+        assert self.K_h - 1 - self.P_h >= 0 and self.K_w - 1 - self.P_w >= 0, (
+            "transposed-conv padding K-1-P must be non-negative")
+
+    # ---- element counts used by the perf model and sparsity analysis ----
+
+    def lowered_B_shape_loss(self) -> tuple[int, int]:
+        """Virtual stationary matrix B during loss calc: rows x cols."""
+        return (self.N * self.K_h * self.K_w, self.B * self.H_i * self.W_i)
+
+    def lowered_A_shape_grad(self) -> tuple[int, int]:
+        """Virtual dynamic matrix A during gradient calc (zero-inserted dY)."""
+        return (self.B * self.H_o2 * self.W_o2, 1)  # per (n) column stream
+
+    def zero_space_sparsity_loss(self) -> float:
+        """Fraction of zero pixels in the zero-spaced dY feature map
+        (H_o''' x W_o''') consumed by loss calculation."""
+        total = self.H_o3 * self.W_o3
+        nonzero = self.H_o * self.W_o
+        return 1.0 - nonzero / total
+
+    def zero_space_sparsity_grad(self) -> float:
+        """Fraction of zero pixels in the zero-inserted dY (H_o'' x W_o'')."""
+        total = self.H_o2 * self.W_o2
+        nonzero = self.H_o * self.W_o
+        return 1.0 - nonzero / total
+
+
+# ---------------------------------------------------------------------------
+# Zero-space construction (the data reorganization BP-im2col eliminates)
+# ---------------------------------------------------------------------------
+
+def zero_insert(x: jax.Array, S: int) -> jax.Array:
+    """Insert S-1 zeros between spatial elements: (..., H, W) -> (..., H'', W'')."""
+    if S == 1:
+        return x
+    *lead, H, W = x.shape
+    out = jnp.zeros((*lead, H + (H - 1) * (S - 1), W + (W - 1) * (S - 1)),
+                    dtype=x.dtype)
+    return out.at[..., ::S, ::S].set(x)
+
+
+def zero_pad(x: jax.Array, ph: int, pw: int, ph_hi: int | None = None,
+             pw_hi: int | None = None) -> jax.Array:
+    """Spatial zero padding on the last two dims (asymmetric if *_hi given)."""
+    ph_hi = ph if ph_hi is None else ph_hi
+    pw_hi = pw if pw_hi is None else pw_hi
+    if ph == 0 and pw == 0 and ph_hi == 0 and pw_hi == 0:
+        return x
+    pad = [(0, 0)] * (x.ndim - 2) + [(ph, ph_hi), (pw, pw_hi)]
+    return jnp.pad(x, pad)
+
+
+def zero_insert_pad(dy: jax.Array, d: ConvDims) -> jax.Array:
+    """dY (B,N,H_o,W_o) -> zero-spaced dY_ei.
+
+    Pad is K-1-P on top/left and K-1-P+R on bottom/right so that a stride-1
+    valid conv reproduces the full H_i x W_i input gradient (R is the forward
+    tiling remainder, zero in the paper's idealized formulas).
+    """
+    return zero_pad(zero_insert(dy, d.S),
+                    d.K_h - 1 - d.P_h, d.K_w - 1 - d.P_w,
+                    d.K_h - 1 - d.P_h + d.R_h, d.K_w - 1 - d.P_w + d.R_w)
+
+
+def rot180(w: jax.Array) -> jax.Array:
+    """Kernel-wise 180-degree rotation on the two trailing spatial dims."""
+    return w[..., ::-1, ::-1]
+
+
+# ---------------------------------------------------------------------------
+# Explicit im2col (stride-1 lowering used by all three backprop GEMMs)
+# ---------------------------------------------------------------------------
+
+def im2col(x: jax.Array, kh: int, kw: int, stride: int = 1) -> jax.Array:
+    """Lower (B, C, H, W) into the dynamic matrix (B*H_o*W_o, C*kh*kw).
+
+    This materializes the matrix copy -- the storage/bandwidth overhead the
+    implicit algorithms avoid.
+    """
+    b, c, h, w = x.shape
+    ho = (h - kh) // stride + 1
+    wo = (w - kw) // stride + 1
+    # (B, C*kh*kw, ho*wo) patches
+    patches = jax.lax.conv_general_dilated_patches(
+        x, (kh, kw), (stride, stride), padding="VALID",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"))
+    patches = patches.reshape(b, c * kh * kw, ho * wo)
+    return patches.transpose(0, 2, 1).reshape(b * ho * wo, c * kh * kw)
+
+
+# ---------------------------------------------------------------------------
+# Forward / backward by explicit GEMM (the baseline accelerator's behaviour)
+# ---------------------------------------------------------------------------
+
+def conv2d_forward_explicit(x: jax.Array, w: jax.Array, d: ConvDims) -> jax.Array:
+    """Inference: Y = im2col(pad(I)) @ W  -- traditional im2col."""
+    xp = zero_pad(x, d.P_h, d.P_w)
+    a = im2col(xp, d.K_h, d.K_w, d.S)                       # (B*Ho*Wo, C*Kh*Kw)
+    b = w.reshape(d.N, d.C * d.K_h * d.K_w).T               # (C*Kh*Kw, N)
+    y = a @ b                                               # (B*Ho*Wo, N)
+    return y.reshape(d.B, d.H_o, d.W_o, d.N).transpose(0, 3, 1, 2)
+
+
+def input_grad_explicit(dy: jax.Array, w: jax.Array, d: ConvDims) -> jax.Array:
+    """Loss calculation with full zero-space materialization.
+
+    dI = conv(dY_ei, Tr(rot180(W))), stride 1.  The zero-spaced dY_ei and its
+    im2col copy are both physically built (this is what the paper measures as
+    'Reorganization' + 'Computation').
+    """
+    dy_ei = zero_insert_pad(dy, d)                          # (B,N,Ho''',Wo''')
+    wt = rot180(w).transpose(1, 0, 2, 3)                    # (C,N,Kh,Kw)
+    a = im2col(dy_ei, d.K_h, d.K_w, 1)                      # (B*Hi*Wi, N*Kh*Kw)
+    b = wt.reshape(d.C, d.N * d.K_h * d.K_w).T              # (N*Kh*Kw, C)
+    di = a @ b
+    return di.reshape(d.B, d.H_i, d.W_i, d.C).transpose(0, 3, 1, 2)
+
+
+def weight_grad_explicit(x: jax.Array, dy: jax.Array, d: ConvDims) -> jax.Array:
+    """Gradient calculation with full zero-space materialization.
+
+    Tr(dW) = conv(Tr(pad(I)), Tr(zero_insert(dY))), stride 1.  The channel/batch
+    transposes turn B into the contraction dim and the zero-inserted dY into the
+    convolving kernel of size (H_o'', W_o'').
+    """
+    xe = zero_pad(x, d.P_h, d.P_w).transpose(1, 0, 2, 3)    # (C,B,Hp,Wp)
+    # Crop tiling-remainder rows/cols (never touched by any forward window).
+    xe = xe[:, :, :d.K_h + (d.H_o - 1) * d.S, :d.K_w + (d.W_o - 1) * d.S]
+    dyi = zero_insert(dy, d.S).transpose(1, 0, 2, 3)        # (N,B,Ho'',Wo'')
+    a = im2col(xe, d.H_o2, d.W_o2, 1)                       # (C*Kh*Kw, B*Ho''*Wo'')
+    b = dyi.reshape(d.N, d.B * d.H_o2 * d.W_o2).T           # (B*Ho''*Wo'', N)
+    dwt = a @ b                                             # (C*Kh*Kw, N)
+    return dwt.reshape(d.C, d.K_h, d.K_w, d.N).transpose(3, 0, 1, 2)
+
+
+# ---------------------------------------------------------------------------
+# Ground truth via lax (used by tests to anchor BOTH baseline and ours)
+# ---------------------------------------------------------------------------
+
+def conv2d_lax(x: jax.Array, w: jax.Array, d: ConvDims) -> jax.Array:
+    return jax.lax.conv_general_dilated(
+        x, w, (d.S, d.S), [(d.P_h, d.P_h), (d.P_w, d.P_w)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"))
+
+
+def conv_grads_lax(x: jax.Array, w: jax.Array, dy: jax.Array, d: ConvDims):
+    """(dI, dW) from jax autodiff -- the numeric ground truth."""
+    _, vjp = jax.vjp(lambda x_, w_: conv2d_lax(x_, w_, d), x, w)
+    return vjp(dy)
+
+
+# ---------------------------------------------------------------------------
+# Byte/element accounting for the perf model (what reorganization costs)
+# ---------------------------------------------------------------------------
+
+def reorg_traffic_elems_loss(d: ConvDims) -> dict[str, int]:
+    """Elements read+written by the zero-space reorganization of dY for the
+    loss calc, and elements streamed to buffer B, under traditional im2col."""
+    compact = d.B * d.N * d.H_o * d.W_o
+    spaced = d.B * d.N * d.H_o3 * d.W_o3
+    lowered = d.N * d.K_h * d.K_w * d.B * d.H_i * d.W_i  # stationary matrix B
+    return {
+        "reorg_read": compact,
+        "reorg_write": spaced,
+        "offchip_stream": spaced,       # zero-spaced map shipped to chip
+        "buffer_stream": lowered,       # lowered matrix entries fed to PEs
+        "extra_storage": spaced - compact,
+    }
+
+
+def reorg_traffic_elems_grad(d: ConvDims) -> dict[str, int]:
+    compact = d.B * d.N * d.H_o * d.W_o
+    spaced = d.B * d.N * d.H_o2 * d.W_o2
+    return {
+        "reorg_read": compact,
+        "reorg_write": spaced,
+        "offchip_stream": spaced,
+        "buffer_stream": spaced,        # matrix A rows stream zero-inserted dY
+        "extra_storage": spaced - compact,
+    }

@@ -1,0 +1,125 @@
+"""Stride-phase decomposition: the TPU-native form of BP-im2col.
+
+The RTL in the paper skips zero-space *per element* with dynamic NZ detection.
+On a TPU the zero pattern of backprop is perfectly periodic (period = forward
+stride S in each spatial dim), so the skipping can be resolved *statically*:
+group virtual coordinates by phase (h mod S, w mod S) and every phase becomes
+a fully dense sub-problem over the COMPACT tensors.  The MXU only ever sees
+dense tiles; zero-space is never built, fetched, or stored -- the same
+elimination the paper's address generators achieve, moved to trace time.
+
+Derivation (1-D, height; width is identical).  Let a = K_h - 1 - P_h be the
+virtual left pad of the zero-spaced loss dY_ei and Wf = rot180(W).  Then
+
+    dI[hi] = sum_kh dY_ei[hi + kh] * Wf[kh]
+           = sum_m dY[q + m + off_r] * Wf[c_r + m*S]        (hi = q*S + r)
+
+with  c_r = (a - r) mod S  (the only kernel-tap phase whose product is
+non-zero) and  off_r = (r + c_r - a) / S  (an exact integer).  So for each of
+the S x S output phases, dI phase (r_h, r_w) is a stride-1 dense correlation
+of the compact dY with the static kernel subsample Wf[c_rh::S, c_rw::S].
+
+For the weight gradient, dW[n,c,kh,kw] = sum_{b,oh,ow} dY[b,n,oh,ow] *
+I_pad[b,c, S*oh+kh, S*ow+kw]: for each kernel tap this is a dense contraction
+against a strided view of the stored input -- the rhs-dilation of Eq. (1)
+becomes an index map, never data.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.im2col_ref import ConvDims, rot180, zero_pad
+
+
+# ---------------------------------------------------------------------------
+# Input gradient (loss calculation), phase-decomposed
+# ---------------------------------------------------------------------------
+
+def _phase_geometry(r: int, a: int, S: int, K: int, H_i: int, H_o: int):
+    """Static per-phase geometry: tap start c_r, tap count M_r, input offset
+    off_r, and the phase's output length."""
+    c_r = (a - r) % S
+    M_r = (K - c_r + S - 1) // S          # number of taps kh = c_r + m*S < K
+    off_r = (r + c_r - a) // S
+    n_q = (H_i - r + S - 1) // S          # outputs q with q*S + r < H_i
+    return c_r, M_r, off_r, n_q
+
+
+def input_grad_phase(dy: jax.Array, w: jax.Array, d: ConvDims) -> jax.Array:
+    """dI via S*S dense stride-1 convolutions over the compact dY.
+
+    Equivalent to the paper's transposed mode with all zero-space elided.
+    """
+    if d.S == 1:
+        # Degenerate: single phase == plain full-padding correlation.
+        return _phase_conv(dy, rot180(w), d, 0, 0)
+    a_h = d.K_h - 1 - d.P_h
+    a_w = d.K_w - 1 - d.P_w
+    wf = rot180(w)                                     # (N, C, K_h, K_w)
+    di = jnp.zeros((d.B, d.C, d.H_i, d.W_i), dtype=dy.dtype)
+    for r_h in range(min(d.S, d.H_i)):
+        c_h, m_h, off_h, n_qh = _phase_geometry(r_h, a_h, d.S, d.K_h, d.H_i, d.H_o)
+        for r_w in range(min(d.S, d.W_i)):
+            c_w, m_w, off_w, n_qw = _phase_geometry(r_w, a_w, d.S, d.K_w, d.W_i, d.W_o)
+            if n_qh == 0 or n_qw == 0:
+                continue
+            if m_h == 0 or m_w == 0:
+                continue  # no taps contribute: this phase of dI stays zero
+            # Static kernel subsample for this phase: (N, C, M_h, M_w)
+            wk = wf[:, :, c_h::d.S, c_w::d.S][:, :, :m_h, :m_w]
+            # dY window for output q starts at q + off: express as padding.
+            pad_lo_h = max(0, -off_h)
+            pad_lo_w = max(0, -off_w)
+            pad_hi_h = max(0, (n_qh - 1) + off_h + m_h - d.H_o)
+            pad_hi_w = max(0, (n_qw - 1) + off_w + m_w - d.W_o)
+            # Crop any positive leading offset instead of padding negatively.
+            crop_h = max(0, off_h)
+            crop_w = max(0, off_w)
+            src = dy[:, :, crop_h:, crop_w:]
+            out = jax.lax.conv_general_dilated(
+                src, wk,                               # (N, C, M_h, M_w) IOHW
+                window_strides=(1, 1),
+                padding=[(pad_lo_h, pad_hi_h), (pad_lo_w, pad_hi_w)],
+                dimension_numbers=("NCHW", "IOHW", "NCHW"))
+            di = di.at[:, :, r_h::d.S, r_w::d.S].set(
+                out[:, :, :n_qh, :n_qw])
+    return di
+
+
+def _phase_conv(dy: jax.Array, wf: jax.Array, d: ConvDims, r_h: int, r_w: int):
+    """S == 1 path: ordinary full correlation with pad K-1-P."""
+    return jax.lax.conv_general_dilated(
+        dy, wf,
+        window_strides=(1, 1),
+        padding=[(d.K_h - 1 - d.P_h, d.K_h - 1 - d.P_h),
+                 (d.K_w - 1 - d.P_w, d.K_w - 1 - d.P_w)],
+        dimension_numbers=("NCHW", "IOHW", "NCHW"))
+
+
+# ---------------------------------------------------------------------------
+# Weight gradient (gradient calculation), strided-view form
+# ---------------------------------------------------------------------------
+
+def weight_grad_phase(x: jax.Array, dy: jax.Array, d: ConvDims) -> jax.Array:
+    """dW via K_h*K_w dense contractions against strided views of the input.
+
+    The zero-inserted 'kernel' dY_i of the paper's dilated mode never exists:
+    its zero rows/cols correspond to input samples that are simply never read.
+    """
+    xp = zero_pad(x, d.P_h, d.P_w)                    # (B, C, Hp, Wp)
+    taps = []
+    for kh in range(d.K_h):
+        row = []
+        for kw in range(d.K_w):
+            # Strided view: I_pad[:, :, kh + S*oh, kw + S*ow]
+            v = jax.lax.slice(
+                xp,
+                (0, 0, kh, kw),
+                (d.B, d.C, kh + d.S * (d.H_o - 1) + 1, kw + d.S * (d.W_o - 1) + 1),
+                (1, 1, d.S, d.S))                      # (B, C, H_o, W_o)
+            row.append(jnp.einsum("bnhw,bchw->nc", dy, v,
+                                  preferred_element_type=jnp.float32))
+        taps.append(jnp.stack(row, axis=-1))           # (N, C, K_w)
+    return jnp.stack(taps, axis=-2).astype(x.dtype)    # (N, C, K_h, K_w)

@@ -1,0 +1,2 @@
+from repro.ft.failures import (HeartbeatTable, StragglerDetector, RestartPlan,
+                               elastic_mesh, make_restart_plan)

@@ -1,0 +1,108 @@
+"""Flash attention Pallas kernel (online-softmax, causal/full).
+
+Perf-critical layer for the LM-family architectures: O(L) memory attention
+with block-wise online softmax.  Grid (batch*heads, q_blocks); the kernel
+scans key/value blocks with a fori_loop keeping running max / normalizer /
+weighted accumulator in VMEM scratch.  GQA is handled by the wrapper
+(`mha`) which maps query-head groups onto shared KV heads before the call.
+
+Validated against kernels.ref.flash_attention_ref in interpret mode.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref,
+                  m_ref, l_ref, acc_ref, *,
+                  block_q: int, block_k: int, seq_k: int, seq_k_valid: int,
+                  q_offset: int, causal: bool, scale: float):
+    qi = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32) * scale            # (block_q, d)
+
+    m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+    l_ref[...] = jnp.zeros_like(l_ref)
+    acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    k_steps = seq_k // block_k
+
+    def body(kv_i, _):
+        k_blk = k_ref[0, pl.dslice(kv_i * block_k, block_k), :].astype(jnp.float32)
+        v_blk = v_ref[0, pl.dslice(kv_i * block_k, block_k), :].astype(jnp.float32)
+        s = q @ k_blk.T                                  # (block_q, block_k)
+        k_pos = kv_i * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1)
+        mask = k_pos < seq_k_valid                       # padded keys
+        if causal:
+            q_pos = q_offset + qi * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0)
+            mask &= q_pos >= k_pos
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + p @ v_blk
+        m_ref[...] = m_new
+        return ()
+
+    if causal:
+        # Only scan kv blocks that intersect the causal triangle.
+        hi = jnp.minimum(
+            k_steps,
+            (q_offset + (qi + 1) * block_q + block_k - 1) // block_k)
+        jax.lax.fori_loop(0, hi, body, ())
+    else:
+        jax.lax.fori_loop(0, k_steps, body, ())
+
+    o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, scale: float | None = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = True) -> jax.Array:
+    """q,k,v: (B, H, L, D) -> (B, H, L, D). L padded to block multiples."""
+    b, h, lq, dd = q.shape
+    lk = k.shape[2]
+    scale = scale if scale is not None else 1.0 / (dd ** 0.5)
+    block_q = min(block_q, max(8, lq))
+    block_k = min(block_k, max(8, lk))
+    lqp = -(-lq // block_q) * block_q
+    lkp = -(-lk // block_k) * block_k
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, lqp - lq), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, lkp - lk), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, lkp - lk), (0, 0)))
+    qp = qp.reshape(b * h, lqp, dd)
+    kp = kp.reshape(b * h, lkp, dd)
+    vp = vp.reshape(b * h, lkp, dd)
+    kernel = functools.partial(
+        _flash_kernel, block_q=block_q, block_k=block_k, seq_k=lkp,
+        seq_k_valid=lk, q_offset=lk - lq, causal=causal, scale=scale)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * h, lqp // block_q),
+        in_specs=[
+            pl.BlockSpec((1, block_q, dd), lambda bh, qi: (bh, qi, 0)),
+            pl.BlockSpec((1, lkp, dd), lambda bh, qi: (bh, 0, 0)),
+            pl.BlockSpec((1, lkp, dd), lambda bh, qi: (bh, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, dd), lambda bh, qi: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, lqp, dd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, dd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out.reshape(b, h, lqp, dd)[:, :, :lq, :]

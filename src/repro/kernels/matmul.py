@@ -1,0 +1,57 @@
+"""Tiled MXU GEMM Pallas kernel (generic building block).
+
+Used by the explicit-im2col baseline benchmark path and exercised directly by
+kernel tests.  Grid (m, n, k) with f32 VMEM accumulation over the k steps;
+tiles default to the MXU-native 128 x 128 x 128.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, k_steps: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32)
+
+    @pl.when(k == k_steps - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def matmul(a: jax.Array, b: jax.Array, *,
+           bm: int = 128, bn: int = 128, bk: int = 128,
+           out_dtype=None, interpret: bool = True) -> jax.Array:
+    """a (M, K) @ b (K, N); M/N/K padded up to tile multiples internally."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2
+    mp, np_, kp = -(-m // bm) * bm, -(-n // bn) * bn, -(-k // bk) * bk
+    a = jnp.pad(a, ((0, mp - m), (0, kp - k)))
+    b = jnp.pad(b, ((0, kp - k), (0, np_ - n)))
+    out_dtype = out_dtype or a.dtype
+    kernel = functools.partial(_matmul_kernel, k_steps=kp // bk)
+    out = pl.pallas_call(
+        kernel,
+        grid=(mp // bm, np_ // bn, kp // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(a, b)
+    return out[:m, :n]

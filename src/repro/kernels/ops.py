@@ -1,0 +1,170 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Responsibilities:
+  * layout prep (NCHW -> NHWC, padding, phase-splitting) -- pure reshapes /
+    slices on COMPACT data, done once at trace time;
+  * static tap-table construction (the BP-im2col address mapping, resolved
+    per stride phase);
+  * tile-size selection under an explicit VMEM budget, with a documented
+    fallback to the pure-jnp phase decomposition when a shape cannot be
+    tiled into VMEM (the fallback is semantically identical).
+
+``interpret`` defaults to True because this container is CPU-only; on real
+TPU hardware set ``repro.kernels.ops.INTERPRET = False``.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.im2col_ref import ConvDims, rot180, zero_pad
+from repro.core import phase_decomp
+from repro.kernels import tap_gemm as tg
+
+INTERPRET = True
+VMEM_BUDGET_BYTES = 14 * 1024 * 1024
+
+
+# ---------------------------------------------------------------------------
+# Layout helpers
+# ---------------------------------------------------------------------------
+
+def _to_nhwc(x):
+    return x.transpose(0, 2, 3, 1)
+
+
+def _from_nhwc(x):
+    return x.transpose(0, 3, 1, 2)
+
+
+def _pad_channels(x, mult):
+    c = x.shape[-1]
+    cp = -(-c // mult) * mult
+    if cp == c:
+        return x
+    return jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, cp - c)])
+
+
+def _channel_tile(c: int) -> tuple[int, int]:
+    """(padded_c, tile): no padding below 128 channels, 128-tiles above."""
+    if c <= 128:
+        return c, c
+    cp = -(-c // 128) * 128
+    return cp, 128
+
+
+def _phase_split(xp: jax.Array, S: int) -> jax.Array:
+    """(B, Hp, Wp, C) -> (S*S, B, ceil(Hp/S), ceil(Wp/S), C) phase planes."""
+    b, hp, wp, c = xp.shape
+    hp2 = -(-hp // S) * S
+    wp2 = -(-wp // S) * S
+    xp = jnp.pad(xp, ((0, 0), (0, hp2 - hp), (0, wp2 - wp), (0, 0)))
+    xp = xp.reshape(b, hp2 // S, S, wp2 // S, S, c)
+    return xp.transpose(2, 4, 0, 1, 3, 5).reshape(S * S, b, hp2 // S, wp2 // S, c)
+
+
+def _vmem_ok(*arrays_bytes: int) -> bool:
+    return sum(arrays_bytes) <= VMEM_BUDGET_BYTES
+
+
+# ---------------------------------------------------------------------------
+# Forward convolution (implicit im2col, phase-split tap GEMM)
+# ---------------------------------------------------------------------------
+
+def conv2d_forward(x: jax.Array, w: jax.Array, d: ConvDims) -> jax.Array:
+    xn = _to_nhwc(x)                                     # (B, H, W, C)
+    xp = zero_pad(xn.transpose(0, 3, 1, 2), d.P_h, d.P_w).transpose(0, 2, 3, 1)
+    src = _phase_split(xp, d.S)                          # (S*S, B, HpS, WpS, C)
+    cin_p, cin_t = _channel_tile(d.C)
+    cout_p, cout_t = _channel_tile(d.N)
+    src = _pad_channels(src, cin_p if cin_p == d.C else 128)
+    # taps: (phase plane, du, dv) per kernel position
+    taps = [((kh % d.S) * d.S + (kw % d.S), kh // d.S, kw // d.S)
+            for kh in range(d.K_h) for kw in range(d.K_w)]
+    wt = w.transpose(2, 3, 1, 0).reshape(d.K_h * d.K_w, d.C, d.N)
+    wt = _pad_channels(wt.transpose(0, 2, 1), cin_p if cin_p == d.C else 128)
+    wt = _pad_channels(wt.transpose(0, 2, 1), cout_p if cout_p == d.N else 128)
+    bytes_needed = (src.shape[0] * src.shape[2] * src.shape[3] * cin_t * 4
+                    + len(taps) * cin_t * cout_t * 4
+                    + 2 * d.H_o * d.W_o * cout_t * 4)
+    if not _vmem_ok(bytes_needed):
+        return jax.lax.conv_general_dilated(
+            x, w, (d.S, d.S), [(d.P_h, d.P_h), (d.P_w, d.P_w)],
+            dimension_numbers=("NCHW", "OIHW", "NCHW"))
+    y = tg.tap_gemm(src, wt, taps, d.H_o, d.W_o,
+                    cin_tile=cin_t, cout_tile=cout_t,
+                    out_dtype=x.dtype, interpret=INTERPRET)
+    return _from_nhwc(y[..., :d.N])
+
+
+# ---------------------------------------------------------------------------
+# Input gradient (transposed mode): one tap-GEMM per output stride phase
+# ---------------------------------------------------------------------------
+
+def conv2d_input_grad(dy: jax.Array, w: jax.Array, d: ConvDims) -> jax.Array:
+    a_h, a_w = d.K_h - 1 - d.P_h, d.K_w - 1 - d.P_w
+    wf = rot180(w)                                       # (N, C, K_h, K_w)
+    dyn = _to_nhwc(dy)                                   # (B, Ho, Wo, N)
+    cin_p, cin_t = _channel_tile(d.N)                    # contraction dim = N
+    cout_p, cout_t = _channel_tile(d.C)
+    di = jnp.zeros((d.B, d.H_i, d.W_i, d.C), dtype=dy.dtype)
+    for r_h in range(min(d.S, d.H_i)):
+        c_h, m_h, off_h, n_qh = phase_decomp._phase_geometry(
+            r_h, a_h, d.S, d.K_h, d.H_i, d.H_o)
+        for r_w in range(min(d.S, d.W_i)):
+            c_w, m_w, off_w, n_qw = phase_decomp._phase_geometry(
+                r_w, a_w, d.S, d.K_w, d.W_i, d.W_o)
+            if n_qh == 0 or n_qw == 0 or m_h == 0 or m_w == 0:
+                continue
+            wk = wf[:, :, c_h::d.S, c_w::d.S][:, :, :m_h, :m_w]
+            wk = wk.transpose(2, 3, 0, 1).reshape(m_h * m_w, d.N, d.C)
+            wk = _pad_channels(wk.transpose(0, 2, 1),
+                               cin_p if cin_p == d.N else 128).transpose(0, 2, 1)
+            wk = _pad_channels(wk, cout_p if cout_p == d.C else 128)
+            crop_h, crop_w = max(0, off_h), max(0, off_w)
+            pad_lo_h, pad_lo_w = max(0, -off_h), max(0, -off_w)
+            pad_hi_h = max(0, (n_qh - 1) + off_h + m_h - d.H_o)
+            pad_hi_w = max(0, (n_qw - 1) + off_w + m_w - d.W_o)
+            src = dyn[:, crop_h:, crop_w:, :]
+            src = jnp.pad(src, ((0, 0), (pad_lo_h, pad_hi_h),
+                                (pad_lo_w, pad_hi_w), (0, 0)))
+            src = _pad_channels(src, cin_p if cin_p == d.N else 128)[None]
+            taps = [(0, mh, mw) for mh in range(m_h) for mw in range(m_w)]
+            bytes_needed = (src.shape[2] * src.shape[3] * cin_t * 4
+                            + len(taps) * cin_t * cout_t * 4
+                            + 2 * n_qh * n_qw * cout_t * 4)
+            if not _vmem_ok(bytes_needed):
+                return phase_decomp.input_grad_phase(dy, w, d)
+            out = tg.tap_gemm(src, wk, taps, n_qh, n_qw,
+                              cin_tile=cin_t, cout_tile=cout_t,
+                              out_dtype=dy.dtype, interpret=INTERPRET)
+            di = di.at[:, r_h::d.S, r_w::d.S, :].set(out[..., :d.C])
+    return _from_nhwc(di)
+
+
+# ---------------------------------------------------------------------------
+# Weight gradient (dilated mode): strided-view tap GEMM, batch-accumulated
+# ---------------------------------------------------------------------------
+
+def conv2d_weight_grad(x: jax.Array, dy: jax.Array, d: ConvDims) -> jax.Array:
+    xn = _to_nhwc(x)
+    xp = zero_pad(xn.transpose(0, 3, 1, 2), d.P_h, d.P_w).transpose(0, 2, 3, 1)
+    src = _phase_split(xp, d.S)
+    cin_p, cin_t = _channel_tile(d.C)
+    cout_p, cout_t = _channel_tile(d.N)
+    src = _pad_channels(src, cin_p if cin_p == d.C else 128)
+    dyn = _pad_channels(_to_nhwc(dy), cout_p if cout_p == d.N else 128)
+    taps = [((kh % d.S) * d.S + (kw % d.S), kh // d.S, kw // d.S)
+            for kh in range(d.K_h) for kw in range(d.K_w)]
+    bytes_needed = (src.shape[0] * src.shape[2] * src.shape[3] * cin_t * 4
+                    + d.H_o * d.W_o * cout_t * 4
+                    + len(taps) * cin_t * cout_t * 4)
+    if not _vmem_ok(bytes_needed):
+        return phase_decomp.weight_grad_phase(x, dy, d)
+    dw = tg.tap_wgrad(src, dyn, taps, d.H_o, d.W_o,
+                      cin_tile=cin_t, cout_tile=cout_t, interpret=INTERPRET)
+    dw = dw[:, :d.C, :d.N].reshape(d.K_h, d.K_w, d.C, d.N)
+    return dw.transpose(3, 2, 0, 1).astype(x.dtype)

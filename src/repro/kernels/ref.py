@@ -1,0 +1,66 @@
+"""Pure-jnp oracles for every Pallas kernel (the `ref.py` contract).
+
+Each function computes the exact same math as its kernel counterpart with
+plain jax.numpy / lax ops; tests sweep shapes, strides and dtypes asserting
+allclose between kernel (interpret=True) and oracle.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.im2col_ref import ConvDims, conv2d_lax, conv_grads_lax
+
+
+def conv2d_forward_ref(x, w, d: ConvDims):
+    return conv2d_lax(x, w, d)
+
+
+def conv2d_input_grad_ref(x, w, dy, d: ConvDims):
+    return conv_grads_lax(x, w, dy, d)[0]
+
+
+def conv2d_weight_grad_ref(x, w, dy, d: ConvDims):
+    return conv_grads_lax(x, w, dy, d)[1]
+
+
+def tap_gemm_ref(src, w, taps, oh, ow):
+    """Oracle for kernels.tap_gemm: dense multi-tap GEMM."""
+    p_, b_, hs, ws, cin = src.shape
+    t_, _, cout = w.shape
+    out = jnp.zeros((b_, oh, ow, cout), jnp.float32)
+    for t, (p, du, dv) in enumerate(taps):
+        xs = src[p, :, du:du + oh, dv:dv + ow, :].astype(jnp.float32)
+        out = out + jnp.einsum("bhwc,cn->bhwn", xs, w[t].astype(jnp.float32))
+    return out.astype(src.dtype)
+
+
+def tap_wgrad_ref(src, dy, taps, oh, ow):
+    """Oracle for kernels.tap_wgrad."""
+    t_ = len(taps)
+    cin = src.shape[-1]
+    cout = dy.shape[-1]
+    out = jnp.zeros((t_, cin, cout), jnp.float32)
+    for t, (p, du, dv) in enumerate(taps):
+        xs = src[p, :, du:du + oh, dv:dv + ow, :].astype(jnp.float32)
+        out = out.at[t].set(
+            jnp.einsum("bhwc,bhwn->cn", xs, dy.astype(jnp.float32)))
+    return out
+
+
+def matmul_ref(a, b):
+    return jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32)).astype(a.dtype)
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, scale: float | None = None):
+    """(B, H, L, D) reference attention with optional causal mask."""
+    b, h, lq, dd = q.shape
+    lk = k.shape[2]
+    scale = scale if scale is not None else 1.0 / (dd ** 0.5)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((lq, lk), bool), k=lk - lq)
+        logits = jnp.where(mask, logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), v)

@@ -1,0 +1,165 @@
+"""Shared Pallas kernel bodies: tap-loop GEMMs over phase-split operands.
+
+This is the TPU-native datapath of BP-im2col.  The paper's RTL address
+generators turn a virtual zero-spaced lowered matrix into fetches of compact
+data; here the same mapping is resolved *statically* into a list of "taps"
+``(plane, du, dv)`` over a phase-split compact tensor, and the kernel is a
+dense multi-tap GEMM:
+
+    out[b, oh, ow, :COUT] += src[plane, b, oh+du, ow+dv, :CIN] @ w[tap]
+
+Every load is a static (or grid-offset) VMEM slice -- no gathers, no
+zero-space bytes ever enter VMEM, and every MAC feeds the MXU with dense
+128-aligned tiles.  Three ops share the two kernel bodies:
+
+  * forward conv         -> ``tap_gemm``    (src = phase-split padded input)
+  * input grad (transposed mode, per output phase)
+                         -> ``tap_gemm``    (src = padded compact dY)
+  * weight grad (dilated mode)
+                         -> ``tap_wgrad``   (contraction over batch x space)
+
+Grid conventions:
+  tap_gemm   grid = (B, cin_steps, cout_steps); cin is the contraction dim,
+             accumulated in an f32 VMEM scratch.
+  tap_wgrad  grid = (cin_steps, cout_steps, B); batch is the contraction dim,
+             accumulated directly into the f32 output block.
+
+All shapes entering ``pl.pallas_call`` are static; tile sizes are chosen by
+``ops.py`` under an explicit VMEM budget.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+# ---------------------------------------------------------------------------
+# Kernel bodies
+# ---------------------------------------------------------------------------
+
+def _tap_gemm_kernel(src_ref, w_ref, out_ref, acc_ref, *,
+                     taps: tuple[tuple[int, int, int], ...],
+                     oh: int, ow: int, cin_steps: int):
+    """out[0, :, :, :] = sum_t src[p_t, 0, du_t:du_t+oh, dv_t:dv_t+ow, :] @ w[t].
+
+    Grid (b, cout_steps, cin_steps): the contraction dim (cin) is INNERMOST so
+    the f32 scratch accumulates correctly across steps.
+    """
+    cin_step = pl.program_id(2)
+
+    @pl.when(cin_step == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    for t, (p, du, dv) in enumerate(taps):
+        xs = src_ref[p, 0, du:du + oh, dv:dv + ow, :]
+        xs = xs.reshape(oh * ow, xs.shape[-1])
+        acc_ref[...] += jax.lax.dot(
+            xs, w_ref[t], preferred_element_type=jnp.float32)
+
+    @pl.when(cin_step == cin_steps - 1)
+    def _flush():
+        out_ref[...] = acc_ref[...].reshape(
+            1, oh, ow, out_ref.shape[-1]).astype(out_ref.dtype)
+
+
+def _tap_wgrad_kernel(src_ref, dy_ref, out_ref, *,
+                      taps: tuple[tuple[int, int, int], ...],
+                      oh: int, ow: int, b_steps: int):
+    """out[t, :, :] += src[p_t, 0, du:du+oh, dv:dv+ow, :].T @ dy[0, :, :, :]."""
+    b = pl.program_id(2)
+
+    @pl.when(b == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    dyr = dy_ref[0].reshape(oh * ow, dy_ref.shape[-1])
+    for t, (p, du, dv) in enumerate(taps):
+        xs = src_ref[p, 0, du:du + oh, dv:dv + ow, :]
+        xs = xs.reshape(oh * ow, xs.shape[-1])
+        # (CIN, oh*ow) @ (oh*ow, COUT) via dot_general contraction on dim 0.
+        out_ref[t, :, :] += jax.lax.dot_general(
+            xs, dyr, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32).astype(out_ref.dtype)
+
+
+# ---------------------------------------------------------------------------
+# pallas_call builders
+# ---------------------------------------------------------------------------
+
+def tap_gemm(src: jax.Array, w: jax.Array,
+             taps: Sequence[tuple[int, int, int]],
+             oh: int, ow: int, *,
+             cin_tile: int, cout_tile: int,
+             out_dtype=None, interpret: bool = True) -> jax.Array:
+    """Multi-tap GEMM.
+
+    src : (P, B, Hs, Ws, CIN)   phase-split compact source
+    w   : (T, CIN, COUT)        per-tap weight slices, T == len(taps)
+    out : (B, oh, ow, COUT)
+    """
+    p_, b_, hs, ws, cin = src.shape
+    t_, cin2, cout = w.shape
+    assert cin == cin2 and t_ == len(taps)
+    assert cin % cin_tile == 0 and cout % cout_tile == 0
+    cin_steps = cin // cin_tile
+    cout_steps = cout // cout_tile
+    out_dtype = out_dtype or src.dtype
+
+    kernel = functools.partial(
+        _tap_gemm_kernel, taps=tuple(taps), oh=oh, ow=ow, cin_steps=cin_steps)
+    return pl.pallas_call(
+        kernel,
+        grid=(b_, cout_steps, cin_steps),
+        in_specs=[
+            pl.BlockSpec((p_, 1, hs, ws, cin_tile),
+                         lambda b, co, ci: (0, b, 0, 0, ci)),
+            pl.BlockSpec((t_, cin_tile, cout_tile),
+                         lambda b, co, ci: (0, ci, co)),
+        ],
+        out_specs=pl.BlockSpec((1, oh, ow, cout_tile),
+                               lambda b, co, ci: (b, 0, 0, co)),
+        out_shape=jax.ShapeDtypeStruct((b_, oh, ow, cout), out_dtype),
+        scratch_shapes=[pltpu.VMEM((oh * ow, cout_tile), jnp.float32)],
+        interpret=interpret,
+    )(src, w)
+
+
+def tap_wgrad(src: jax.Array, dy: jax.Array,
+              taps: Sequence[tuple[int, int, int]],
+              oh: int, ow: int, *,
+              cin_tile: int, cout_tile: int,
+              interpret: bool = True) -> jax.Array:
+    """Weight gradient: out (T, CIN, COUT) summed over batch and space.
+
+    src : (P, B, Hs, Ws, CIN)   phase-split padded input
+    dy  : (B, oh, ow, COUT)     compact output loss
+    """
+    p_, b_, hs, ws, cin = src.shape
+    b2, oh2, ow2, cout = dy.shape
+    assert b2 == b_ and oh2 == oh and ow2 == ow
+    assert cin % cin_tile == 0 and cout % cout_tile == 0
+    t_ = len(taps)
+
+    kernel = functools.partial(
+        _tap_wgrad_kernel, taps=tuple(taps), oh=oh, ow=ow, b_steps=b_)
+    return pl.pallas_call(
+        kernel,
+        grid=(cin // cin_tile, cout // cout_tile, b_),
+        in_specs=[
+            pl.BlockSpec((p_, 1, hs, ws, cin_tile),
+                         lambda ci, co, b: (0, b, 0, 0, ci)),
+            pl.BlockSpec((1, oh, ow, cout_tile),
+                         lambda ci, co, b: (b, 0, 0, co)),
+        ],
+        out_specs=pl.BlockSpec((t_, cin_tile, cout_tile),
+                               lambda ci, co, b: (0, ci, co)),
+        out_shape=jax.ShapeDtypeStruct((t_, cin, cout), jnp.float32),
+        interpret=interpret,
+    )(src, dy)

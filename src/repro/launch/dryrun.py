@@ -1,0 +1,344 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this proves, without hardware:
+  * the sharding config is coherent (no mismatched collectives / specs);
+  * the step fits (memory_analysis bytes per device);
+  * and extracts the roofline inputs: HLO FLOPs, HLO bytes accessed
+    (cost_analysis) and collective traffic (parsed from the compiled HLO).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-360m --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all            # 40 cells, 1 pod
+  PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod
+
+Results land in reports/dryrun/<arch>__<shape>__<mesh>.json for
+benchmarks/roofline.py to consume.
+"""
+
+import argparse
+import json
+import re
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import all_arch_ids, get_config
+from repro.configs.base import ArchConfig, SHAPES, ShapeCfg, applicable_shapes
+from repro.dist import sharding as SH
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as M
+from repro.models import transformer as T
+from repro.optim import adamw
+from repro.train import train_step as TS
+
+REPORT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                          "reports", "dryrun")
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b(f64|f32|f16|bf16|s64|u64|s32|u32|s16|u16|s8|u8|"
+                       r"pred|c64|c128)\[([0-9,]*)\]")
+_LINE_RE = re.compile(
+    r"=\s*(\(?[a-z0-9\[\],{}: ]*?\)?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"[a-z\-]*\(")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes(hlo_text: str, n_devices: int) -> dict[str, float]:
+    """Per-device ICI link traffic summed per collective kind.
+
+    Shapes in SPMD-partitioned HLO are PER-PARTITION.  Ring-collective
+    accounting per participating device, with p participants and result
+    bytes R (per partition):
+        all-reduce        2 (p-1)/p * R
+        all-gather          (p-1)/p * R      (R = gathered output)
+        reduce-scatter      (p-1)   * R      (R = scattered output)
+        all-to-all          (p-1)/p * R
+        collective-permute            R      (one hop)
+    ``total`` is the per-device link-byte sum -- the numerator of the
+    collective roofline term (divide by per-chip link bandwidth).
+    ``raw_result_bytes`` keeps the unweighted per-partition result sizes.
+    """
+    out = {op: 0.0 for op in COLLECTIVE_OPS}
+    raw = 0.0
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if stripped.startswith("ROOT"):
+            stripped = stripped[4:].lstrip()
+        m = _LINE_RE.search(stripped)
+        if m is None:
+            continue
+        rtype, base = m.group(1), m.group(2)
+        rbytes = sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(rtype))
+        if rbytes == 0:
+            continue
+        gm = _GROUPS_RE.search(stripped)
+        p = int(gm.group(2)) if gm else n_devices
+        p = max(p, 2)
+        if base == "all-reduce":
+            traffic = 2 * (p - 1) / p * rbytes
+        elif base == "all-gather":
+            traffic = (p - 1) / p * rbytes
+        elif base == "reduce-scatter":
+            traffic = (p - 1) * rbytes
+        elif base == "all-to-all":
+            traffic = (p - 1) / p * rbytes
+        else:  # collective-permute
+            traffic = float(rbytes)
+        out[base] += traffic
+        raw += rbytes
+    out["total"] = sum(out[c] for c in COLLECTIVE_OPS)
+    out["raw_result_bytes"] = raw
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins; no allocation)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ArchConfig, shape: ShapeCfg) -> dict:
+    b, l = shape.global_batch, shape.seq_len
+    f32 = jnp.float32
+    i32 = jnp.int32
+    sd = jax.ShapeDtypeStruct
+    if shape.kind in ("train", "prefill"):
+        if cfg.family == "audio":
+            batch = {"frontend": sd((b, l, cfg.d_frontend), f32),
+                     "targets": sd((b, l), i32)}
+        elif cfg.family == "vlm":
+            lt = l - cfg.frontend_tokens
+            batch = {"tokens": sd((b, lt), i32),
+                     "targets": sd((b, lt), i32),
+                     "frontend": sd((b, cfg.frontend_tokens, cfg.d_frontend),
+                                    f32)}
+        else:
+            batch = {"tokens": sd((b, l), i32), "targets": sd((b, l), i32)}
+        if shape.kind == "prefill":
+            batch.pop("targets", None)
+        return batch
+    # decode / long_decode: one new token against a seq_len cache
+    cache = jax.eval_shape(lambda: T.init_cache(cfg, b, l))
+    return {"tokens": sd((b,), i32), "pos": sd((), i32), "cache": cache}
+
+
+# ---------------------------------------------------------------------------
+# Step functions to lower
+# ---------------------------------------------------------------------------
+
+def make_cell(cfg: ArchConfig, shape: ShapeCfg, mesh, policy: str = "tp"):
+    """Returns (fn, arg_structs, in_shardings, out_shardings)."""
+    p_struct = jax.eval_shape(partial(M.init_params, cfg=cfg),
+                              jax.random.PRNGKey(0))
+    p_spec = SH.param_specs(p_struct, mesh, policy)
+    p_shard = SH.to_shardings(p_spec, mesh)
+
+    if shape.kind == "train":
+        o_struct = jax.eval_shape(adamw.init_state, p_struct)
+        o_spec = SH.opt_state_specs(p_struct, mesh, policy)
+        o_shard = SH.to_shardings(o_spec, mesh)
+        batch = input_specs(cfg, shape)
+        b_shard = SH.to_shardings(SH.batch_specs(batch, mesh, policy), mesh)
+        step_fn = TS.make_train_step(cfg, adamw.AdamWConfig())
+
+        def fn(params, opt_state, batch_, step):
+            return step_fn(params, opt_state, batch_, step)
+
+        args = (p_struct, o_struct, batch,
+                jax.ShapeDtypeStruct((), jnp.int32))
+        in_sh = (p_shard, o_shard, b_shard,
+                 SH.to_shardings(jax.sharding.PartitionSpec(), mesh))
+        out_sh = (p_shard, o_shard, None)
+        return fn, args, in_sh, out_sh
+
+    if shape.kind == "prefill":
+        batch = input_specs(cfg, shape)
+        b_shard = SH.to_shardings(SH.batch_specs(batch, mesh, policy), mesh)
+
+        def fn(params, batch_):
+            logits, _ = M.forward(params, batch_, cfg)
+            return logits
+
+        return fn, (p_struct, batch), (p_shard, b_shard), None
+
+    # decode / long_decode: serve_step
+    specs = input_specs(cfg, shape)
+    cache_struct = specs["cache"]
+    c_shard = SH.to_shardings(SH.cache_specs(cache_struct, mesh, policy), mesh)
+    t_shard = SH.to_shardings(SH.batch_specs(
+        {"t": specs["tokens"]}, mesh, policy), mesh)["t"]
+    s_shard = SH.to_shardings(jax.sharding.PartitionSpec(), mesh)
+
+    def fn(params, cache, tokens, pos):
+        return M.decode_step(params, cache, tokens, pos, cfg)
+
+    args = (p_struct, cache_struct, specs["tokens"], specs["pos"])
+    in_sh = (p_shard, c_shard, t_shard, s_shard)
+    out_sh = (None, c_shard)
+    return fn, args, in_sh, out_sh
+
+
+def model_flops(cfg: ArchConfig, shape: ShapeCfg, p_struct) -> float:
+    """MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D; decode: D = new tokens."""
+    n_params = sum(x.size for x in jax.tree.leaves(p_struct))
+    if cfg.n_experts:
+        # count expert weights at top_k/E of size
+        def active(path_leaf):
+            return path_leaf
+        total = 0
+        def walk(tree, path):
+            nonlocal total
+            if isinstance(tree, dict):
+                for k, v in tree.items():
+                    walk(v, path + (k,))
+                return
+            if "moe" in "/".join(path) and tree.ndim >= 3 \
+                    and tree.shape[-3] == cfg.n_experts:
+                total += tree.size * cfg.moe_top_k // cfg.n_experts
+            else:
+                total += tree.size
+        walk(p_struct, ())
+        n_params = total
+    if shape.kind in ("train", "prefill"):
+        tokens = shape.global_batch * shape.seq_len
+        mult = 6 if shape.kind == "train" else 2
+    else:
+        tokens = shape.global_batch          # one token per sequence
+        mult = 2
+    return float(mult) * n_params * tokens
+
+
+# ---------------------------------------------------------------------------
+# Runner
+# ---------------------------------------------------------------------------
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             report_dir: str = REPORT_DIR, policy: str = "tp",
+             window_skip: bool = False, tag: str = "") -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "x".join(str(s) for s in mesh.devices.shape)
+    from repro.dist.constraints import set_activation_policy
+    from repro.models import attention as ATT
+    ATT.WINDOW_SKIP = window_skip
+    set_activation_policy(SH.batch_axes(mesh, policy))
+    t0 = time.time()
+    with mesh:
+        fn, args, in_sh, out_sh = make_cell(cfg, shape, mesh, policy)
+        jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
+        lowered = jitted.lower(*args)
+        compiled = lowered.compile()
+    t1 = time.time()
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    n_dev = mesh.devices.size
+    cbytes = collective_bytes(compiled.as_text(), n_dev)
+    p_struct = jax.eval_shape(partial(M.init_params, cfg=cfg),
+                              jax.random.PRNGKey(0))
+    cache_bytes = 0
+    if shape.kind in ("decode", "long_decode"):
+        cache_struct = input_specs(cfg, shape)["cache"]
+        cache_bytes = sum(x.size * x.dtype.itemsize
+                          for x in jax.tree.leaves(cache_struct))
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "policy": policy,
+        "window_skip": window_skip,
+        "remat": os.environ.get("REPRO_REMAT", cfg.remat),
+        "ssd_chunk": os.environ.get("REPRO_SSD_CHUNK", "128"),
+        "n_devices": n_dev,
+        "kind": shape.kind,
+        "cache_bytes": cache_bytes,
+        "compile_s": round(t1 - t0, 2),
+        # cost_analysis shapes are per-partition: scale to global.
+        "flops_per_device": float(cost.get("flops", -1.0)),
+        "flops": float(cost.get("flops", -1.0)) * n_dev,
+        "bytes_accessed_per_device": float(cost.get("bytes accessed", -1.0)),
+        "bytes_accessed": float(cost.get("bytes accessed", -1.0)) * n_dev,
+        "collective_bytes": cbytes,
+        "model_flops": model_flops(cfg, shape, p_struct),
+        "memory": {
+            "argument_size_in_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_size_in_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_size_in_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_size_in_bytes": getattr(
+                mem, "generated_code_size_in_bytes", None),
+        },
+    }
+    os.makedirs(report_dir, exist_ok=True)
+    suffix = f"__{tag}" if tag else ""
+    out_path = os.path.join(report_dir,
+                            f"{arch}__{shape_name}__{mesh_name}{suffix}.json")
+    with open(out_path, "w") as f:
+        json.dump(result, f, indent=2)
+    print(f"[dryrun] {arch} {shape_name} mesh={mesh_name} "
+          f"compile={result['compile_s']}s flops={result['flops']:.3e} "
+          f"coll={cbytes['total']:.3e}B")
+    print(f"  memory_analysis: {result['memory']}")
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--report-dir", default=REPORT_DIR)
+    ap.add_argument("--policy", default="tp",
+                choices=["tp", "dp_only", "tp_rep"])
+    ap.add_argument("--window-skip", action="store_true")
+    ap.add_argument("--tag", default="",
+                    help="suffix for the report file (perf iterations)")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for a in all_arch_ids():
+            for s in applicable_shapes(get_config(a)):
+                cells.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch and --shape (or --all)"
+        cells = [(args.arch, args.shape)]
+
+    failures = []
+    for a, s in cells:
+        try:
+            run_cell(a, s, args.multi_pod, args.report_dir,
+                     policy=args.policy, window_skip=args.window_skip,
+                     tag=args.tag)
+        except Exception as e:  # noqa: BLE001 -- report and continue
+            failures.append((a, s, repr(e)[:200]))
+            print(f"[dryrun] FAIL {a} {s}: {e}")
+    if failures:
+        raise SystemExit(f"{len(failures)} dry-run failures: {failures}")
+    print(f"[dryrun] all {len(cells)} cells passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,113 @@
+"""Training launcher: end-to-end driver wiring every substrate together.
+
+    PYTHONPATH=src python -m repro.launch.train --arch smollm-360m --smoke \
+        --steps 200 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+
+Features exercised here (and by examples/ + tests):
+  * deterministic restartable data pipeline (resume replays nothing);
+  * jitted train step (loss + AdamW + schedule) with optional microbatch
+    accumulation;
+  * step-atomic checkpoints with rotation + async write;
+  * straggler/heartbeat bookkeeping hooks (single-process here; the same
+    objects drive the restart plan in the multi-worker deployment);
+  * mesh-aware sharding when >1 device is visible (CPU: 1 device).
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, get_smoke_config
+from repro.data.pipeline import DataConfig, make_batch
+from repro.ckpt import checkpoint as CKPT
+from repro.ft.failures import HeartbeatTable, StragglerDetector
+from repro.models import model as M
+from repro.optim import adamw
+from repro.train import train_step as TS
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced config (CPU-scale)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--stop-after", type=int, default=None,
+                    help="simulate preemption: stop at this step while the "
+                         "schedule still targets --steps")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if cfg.family == "ssm":
+        assert args.seq % 128 == 0 or args.seq <= 128, \
+            "mamba2 chunking needs seq % 128 == 0 (or <= 128)"
+    model = M.build_model(cfg)
+    dcfg = DataConfig(seed=args.seed, seq_len=args.seq,
+                      global_batch=args.batch, vocab=cfg.vocab)
+
+    opt_cfg = adamw.AdamWConfig(peak_lr=args.lr)
+    step_fn = jax.jit(TS.make_train_step(
+        cfg, opt_cfg, total_steps=args.steps,
+        warmup=max(1, args.steps // 20), accum_steps=args.accum))
+
+    start_step = 0
+    params = opt_state = None
+    if args.ckpt_dir:
+        start_step_, restored = CKPT.restore(args.ckpt_dir)
+        if restored is not None:
+            start_step = start_step_ + 1
+            params = jax.tree.map(jnp.asarray, restored["params"])
+            opt_state = jax.tree.map(jnp.asarray, restored["opt"])
+            print(f"[train] resumed from step {start_step_}")
+    if params is None:
+        params = model.init(jax.random.PRNGKey(args.seed))
+        opt_state = adamw.init_state(params)
+    n_params = model.param_count(params)
+    print(f"[train] arch={cfg.name} params={n_params:,} "
+          f"active={model.active_param_count(params):,}")
+
+    hb = HeartbeatTable(n_workers=1)
+    straggler = StragglerDetector(n_workers=1)
+    losses = []
+    end_step = min(args.steps, args.stop_after) if args.stop_after \
+        else args.steps
+    for step in range(start_step, end_step):
+        t0 = time.perf_counter()
+        batch = jax.tree.map(jnp.asarray, make_batch(cfg, dcfg, step))
+        params, opt_state, metrics = step_fn(params, opt_state, batch,
+                                             jnp.int32(step))
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        dt = time.perf_counter() - t0
+        hb.beat(0)
+        straggler.observe([dt])
+        if step % args.log_every == 0 or step == args.steps - 1:
+            print(f"[train] step={step} loss={loss:.4f} "
+                  f"gnorm={float(metrics['grad_norm']):.3f} "
+                  f"lr={float(metrics['lr']):.2e} {dt*1e3:.0f}ms", flush=True)
+        if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
+            CKPT.save(args.ckpt_dir, step,
+                      {"params": params, "opt": opt_state}, blocking=True)
+    if args.ckpt_dir:
+        CKPT.save(args.ckpt_dir, end_step - 1,
+                  {"params": params, "opt": opt_state}, blocking=True)
+    print(f"[train] done: first_loss={losses[0]:.4f} "
+          f"last_loss={losses[-1]:.4f}")
+    return losses
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.models.model import build_model, init_params, forward, decode_step
+
+__all__ = ["build_model", "init_params", "forward", "decode_step"]

@@ -1,0 +1,321 @@
+"""Attention variants: GQA (causal / bidirectional / local-window) and MLA.
+
+All variants support three entry points used by the launcher:
+  * ``*_train``   -- full-sequence forward (training & prefill)
+  * ``*_decode``  -- single-token step against a KV cache
+Cache layouts are plain pytrees so they shard with NamedSharding like params.
+
+The MLA decode path uses weight absorption: scores are computed directly in
+the latent space (c_kv of rank ``kv_lora_rank`` + rope keys), so the cache
+holds only the compressed latents -- the published memory advantage of MLA.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+def init_gqa(key, cfg: ArchConfig, nl=None):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    d, h, hk, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    return {
+        "wq": L.init_linear(k1, d, h * dh, cfg.dtype, nl),
+        "wk": L.init_linear(k2, d, hk * dh, cfg.dtype, nl),
+        "wv": L.init_linear(k3, d, hk * dh, cfg.dtype, nl),
+        "wo": L.init_linear(k4, h * dh, d, cfg.dtype, nl, scale=(h * dh) ** -0.5),
+    }
+
+
+def _split_heads(x, n, dh):
+    return x.reshape(*x.shape[:-1], n, dh)
+
+
+import os as _os
+
+BLOCKWISE_KV_THRESHOLD = int(_os.environ.get("REPRO_BLOCKWISE_THRESHOLD",
+                                             "1024"))
+BLOCK_K = 512
+
+
+def _sdpa_dense(q, k, v, *, causal, window, q_offset, kv_len, scale):
+    b, lq, h, dh = q.shape
+    lk, hk = k.shape[1], k.shape[2]
+    g = h // hk
+    qh = q.reshape(b, lq, hk, g, dh)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qh, k).astype(jnp.float32)
+    logits *= scale
+    q_pos = q_offset + jnp.arange(lq)[:, None]
+    k_pos = jnp.arange(lk)[None, :]
+    mask = jnp.ones((lq, lk), bool)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window is not None:
+        mask &= q_pos - k_pos < window
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    if kv_len is not None:
+        valid = (k_pos < kv_len)[None, :, :]          # (1,1,Lk) broadcast
+        logits = jnp.where(valid[:, None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p, v)
+    return out.reshape(b, lq, h, dh)
+
+
+def _sdpa_blockwise(q, k, v, *, causal, window, q_offset, kv_len, scale):
+    """Online-softmax scan over KV blocks: peak memory O(Lq x BLOCK_K)
+    instead of O(Lq x Lk).  Same math as _sdpa_dense (flash-style, in XLA)."""
+    b, lq, h, dh = q.shape
+    lk, hk = k.shape[1], k.shape[2]
+    g = h // hk
+    bk = BLOCK_K
+    pad = (-lk) % bk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    lkp = lk + pad
+    nblk = lkp // bk
+    qh = (q.reshape(b, lq, hk, g, dh).astype(jnp.float32)) * scale
+    kb = k.reshape(b, nblk, bk, hk, dh).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(b, nblk, bk, hk, dh).transpose(1, 0, 2, 3, 4)
+    q_pos = q_offset + jnp.arange(lq)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kblk, vblk, blk_i = xs
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qh, kblk.astype(jnp.float32))
+        k_pos = blk_i * bk + jnp.arange(bk)
+        mask = (k_pos[None, :] < lk)
+        if kv_len is not None:
+            mask &= k_pos[None, :] < kv_len
+        if causal:
+            mask &= q_pos[:, None] >= k_pos[None, :]
+        if window is not None:
+            mask &= (q_pos[:, None] - k_pos[None, :]) < window
+        s = jnp.where(mask[None, None, None], s, -1e30)
+        m_new = jnp.maximum(m, s.max(-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l * alpha + p.sum(-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bkgqs,bskd->bkgqd", p, vblk.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, hk, g, lq), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, hk, g, lq), jnp.float32)
+    a0 = jnp.zeros((b, hk, g, lq, dh), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0),
+                                  (kb, vb, jnp.arange(nblk)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, lq, h, dh).astype(q.dtype)
+
+
+# Perf-iteration knob (§Perf): when True, full-sequence local-window
+# attention only touches the KV blocks inside the window instead of scanning
+# (and masking) the entire sequence -- an O(L*W) instead of O(L^2) schedule.
+WINDOW_SKIP = False
+
+
+def _sdpa_local_window(q, k, v, *, window: int, scale: float):
+    """Causal local-window self-attention that never touches KV outside the
+    window.  q/k/v (B, L, *, D) with equal L; q block i of size W attends the
+    2W keys [ (i-1)W, (i+1)W ), masked to the exact window."""
+    b, l, h, dh = q.shape
+    hk = k.shape[2]
+    g = h // hk
+    w = window
+    pad = (-l) % w
+    lp = l + pad
+    nq = lp // w
+    qp = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    # keys get a leading extra W block of zeros so block i-1 always exists
+    kp = jnp.pad(k, ((0, 0), (w, pad), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (w, pad), (0, 0), (0, 0)))
+    qb = qp.reshape(b, nq, w, hk, g, dh).astype(jnp.float32) * scale
+    kb = kp.reshape(b, nq + 1, w, hk, dh)
+    vb = vp.reshape(b, nq + 1, w, hk, dh)
+    k2 = jnp.concatenate([kb[:, :-1], kb[:, 1:]], axis=2)   # (B,nq,2W,Hk,D)
+    v2 = jnp.concatenate([vb[:, :-1], vb[:, 1:]], axis=2)
+    logits = jnp.einsum("bnqkgd,bnskd->bnkgqs", qb, k2.astype(jnp.float32))
+    # q block i, local qi: absolute q = i*W + qi; key slab index s covers
+    # absolute keys (i-1)*W + s.  Causal window: 0 <= q_abs - k_abs < window;
+    # plus k_abs >= 0 (the leading zero block) and k_abs < l (tail pad).
+    qi = jnp.arange(w)
+    si = jnp.arange(2 * w)
+    d = w + qi[:, None] - si[None, :]                       # (W, 2W)
+    base = (d >= 0) & (d < window)
+    k_abs = (jnp.arange(nq)[:, None] - 1) * w + si[None, :]  # (nq, 2W)
+    in_range = (k_abs >= 0) & (k_abs < l)
+    mask = base[None] & in_range[:, None, :]                # (nq, W, 2W)
+    logits = jnp.where(mask[None, :, None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bnkgqs,bnskd->bnqkgd", p.astype(v.dtype), v2)
+    o = o.reshape(b, lp, h, dh)[:, :l]
+    return o
+
+
+def _sdpa(q, k, v, *, causal: bool, window: int | None, q_offset: int = 0,
+          kv_len: jax.Array | None = None, scale: float | None = None):
+    """q (B,Lq,H,D), k/v (B,Lk,Hk,D); returns (B,Lq,H,D).
+
+    GQA: query head h attends kv head h // (H/Hk).  window is a local
+    attention window (RecurrentGemma); kv_len masks cache positions >= len.
+    Long KV switches to the blockwise online-softmax path (flash-style).
+    """
+    scale = scale if scale is not None else q.shape[-1] ** -0.5
+    if (WINDOW_SKIP and window is not None and causal
+            and q.shape[1] == k.shape[1] and q.shape[1] >= 2 * window
+            and kv_len is None and q_offset == 0):
+        return _sdpa_local_window(q, k, v, window=window, scale=scale)
+    if k.shape[1] > BLOCKWISE_KV_THRESHOLD and q.shape[1] > 1:
+        return _sdpa_blockwise(q, k, v, causal=causal, window=window,
+                               q_offset=q_offset, kv_len=kv_len, scale=scale)
+    return _sdpa_dense(q, k, v, causal=causal, window=window,
+                       q_offset=q_offset, kv_len=kv_len, scale=scale)
+
+
+def gqa_train(p, x, cfg: ArchConfig, *, window=None, positions=None):
+    b, l, d = x.shape
+    h, hk, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    positions = positions if positions is not None else jnp.arange(l)
+    ang = L.rope_freqs(dh, cfg.rope_theta, positions)
+    q = L.apply_rope(_split_heads(L.linear(p["wq"], x), h, dh), ang)
+    k = L.apply_rope(_split_heads(L.linear(p["wk"], x), hk, dh), ang)
+    v = _split_heads(L.linear(p["wv"], x), hk, dh)
+    causal = not cfg.is_encoder_only
+    o = _sdpa(q, k, v, causal=causal, window=window)
+    return L.linear(p["wo"], o.reshape(b, l, h * dh))
+
+
+def gqa_init_cache(cfg: ArchConfig, batch: int, max_len: int, nl: int):
+    dh, hk = cfg.head_dim, cfg.n_kv_heads
+    shape = (nl, batch, max_len, hk, dh)
+    return {"k": jnp.zeros(shape, cfg.adtype),
+            "v": jnp.zeros(shape, cfg.adtype)}
+
+
+def gqa_decode(p, x, cache_k, cache_v, pos, cfg: ArchConfig, *, window=None):
+    """x (B,1,D); cache_k/v (B,Lmax,Hk,Dh); pos scalar -> (out, k, v)."""
+    b, _, d = x.shape
+    h, hk, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ang = L.rope_freqs(dh, cfg.rope_theta, pos[None].astype(jnp.float32))
+    q = L.apply_rope(_split_heads(L.linear(p["wq"], x), h, dh), ang)
+    k = L.apply_rope(_split_heads(L.linear(p["wk"], x), hk, dh), ang)
+    v = _split_heads(L.linear(p["wv"], x), hk, dh)
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k.astype(cache_k.dtype), pos, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v.astype(cache_v.dtype), pos, axis=1)
+    o = _sdpa(q, cache_k, cache_v, causal=False, window=window,
+              q_offset=pos, kv_len=pos + 1)
+    if window is not None:
+        pass  # window mask applied inside _sdpa via q_offset
+    return L.linear(p["wo"], o.reshape(b, 1, h * dh)), cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V3)
+# ---------------------------------------------------------------------------
+
+def init_mla(key, cfg: ArchConfig, nl=None):
+    d = cfg.d_model
+    h = cfg.n_heads
+    qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "wq_a": L.init_linear(ks[0], d, qr, cfg.dtype, nl),
+        "q_norm": L.init_rmsnorm(qr, cfg.dtype, nl),
+        "wq_b": L.init_linear(ks[1], qr, h * (dn + dr), cfg.dtype, nl),
+        "wkv_a": L.init_linear(ks[2], d, kvr + dr, cfg.dtype, nl),
+        "kv_norm": L.init_rmsnorm(kvr, cfg.dtype, nl),
+        "wkv_b": L.init_linear(ks[3], kvr, h * (dn + dv), cfg.dtype, nl),
+        "wo": L.init_linear(ks[4], h * dv, d, cfg.dtype, nl,
+                            scale=(h * dv) ** -0.5),
+    }
+
+
+def _mla_qkv(p, x, cfg: ArchConfig, positions):
+    b, l, _ = x.shape
+    h = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    ang = L.rope_freqs(dr, cfg.rope_theta, positions)
+    q = L.linear(p["wq_b"], L.rmsnorm(p["q_norm"], L.linear(p["wq_a"], x)))
+    q = q.reshape(b, l, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], L.apply_rope(q[..., dn:], ang)
+    kv = L.linear(p["wkv_a"], x)
+    c_kv = L.rmsnorm(p["kv_norm"], kv[..., :cfg.kv_lora_rank])
+    k_rope = L.apply_rope(kv[..., None, cfg.kv_lora_rank:], ang)  # (B,L,1,dr)
+    kvu = L.linear(p["wkv_b"], c_kv).reshape(b, l, h, dn + dv)
+    k_nope, v = kvu[..., :dn], kvu[..., dn:]
+    return q_nope, q_rope, k_nope, k_rope, v, c_kv
+
+
+def mla_train(p, x, cfg: ArchConfig, *, positions=None):
+    b, l, _ = x.shape
+    h = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    positions = positions if positions is not None else jnp.arange(l)
+    q_nope, q_rope, k_nope, k_rope, v, _ = _mla_qkv(p, x, cfg, positions)
+    # Fold the shared rope key into per-head features so the common (block-
+    # wise) SDPA core applies: q_cat/k_cat have head dim dn + dr.
+    q_cat = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_cat = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (b, l, h, dr))], axis=-1)
+    # v head dim dv may differ from dn+dr; pad v for the shared core and crop.
+    o = _sdpa(q_cat, k_cat,
+              jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, dn + dr - dv)))
+              if dv < dn + dr else v,
+              causal=True, window=None, scale=(dn + dr) ** -0.5)
+    o = o[..., :dv]
+    return L.linear(p["wo"], o.reshape(b, l, h * dv))
+
+
+def mla_init_cache(cfg: ArchConfig, batch: int, max_len: int, nl: int):
+    return {
+        "c_kv": jnp.zeros((nl, batch, max_len, cfg.kv_lora_rank), cfg.adtype),
+        "k_rope": jnp.zeros((nl, batch, max_len, cfg.qk_rope_head_dim),
+                            cfg.adtype),
+    }
+
+
+def mla_decode(p, x, c_kv_cache, k_rope_cache, pos, cfg: ArchConfig):
+    """Absorbed-weight MLA decode: attention runs in the latent space.
+
+    x (B,1,D); c_kv_cache (B,Lmax,kvr); k_rope_cache (B,Lmax,dr).
+    """
+    b = x.shape[0]
+    h = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    kvr = cfg.kv_lora_rank
+    ang = L.rope_freqs(dr, cfg.rope_theta, pos[None].astype(jnp.float32))
+    q = L.linear(p["wq_b"], L.rmsnorm(p["q_norm"], L.linear(p["wq_a"], x)))
+    q = q.reshape(b, 1, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], L.apply_rope(q[..., dn:], ang)
+    kv = L.linear(p["wkv_a"], x)
+    c_kv = L.rmsnorm(p["kv_norm"], kv[..., :kvr])                   # (B,1,kvr)
+    k_rope = L.apply_rope(kv[..., None, kvr:], ang)[:, :, 0]        # (B,1,dr)
+    c_kv_cache = jax.lax.dynamic_update_slice_in_dim(
+        c_kv_cache, c_kv.astype(c_kv_cache.dtype), pos, axis=1)
+    k_rope_cache = jax.lax.dynamic_update_slice_in_dim(
+        k_rope_cache, k_rope.astype(k_rope_cache.dtype), pos, axis=1)
+    # Absorb wkv_b's key half into the query: q_lat (B,1,H,kvr)
+    wkv_b = p["wkv_b"]["w"].reshape(kvr, h, dn + dv)
+    w_k = wkv_b[..., :dn]                                           # (kvr,H,dn)
+    w_v = wkv_b[..., dn:]                                           # (kvr,H,dv)
+    q_lat = jnp.einsum("bqhd,rhd->bqhr", q_nope, w_k.astype(x.dtype))
+    scale = (dn + dr) ** -0.5
+    logits = (jnp.einsum("bqhr,bsr->bhqs", q_lat, c_kv_cache.astype(x.dtype))
+              + jnp.einsum("bqhd,bsd->bhqs", q_rope,
+                           k_rope_cache.astype(x.dtype))) * scale
+    k_pos = jnp.arange(c_kv_cache.shape[1])[None, None, None, :]
+    logits = jnp.where(k_pos <= pos, logits.astype(jnp.float32), -1e30)
+    pr = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+    o_lat = jnp.einsum("bhqs,bsr->bqhr", pr, c_kv_cache.astype(x.dtype))
+    o = jnp.einsum("bqhr,rhd->bqhd", o_lat, w_v.astype(x.dtype))
+    out = L.linear(p["wo"], o.reshape(b, 1, h * dv))
+    return out, c_kv_cache, k_rope_cache

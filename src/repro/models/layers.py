@@ -1,0 +1,88 @@
+"""Primitive layers: linear / norm / embedding / RoPE / SwiGLU.
+
+Functional style: ``init_*`` builds param pytrees (optionally with a stacked
+leading layer dim for lax.scan), ``*_apply`` consumes them.  Parameter tree
+keys are stable and path-matchable by repro.dist.sharding rules.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _maybe_stack(shape, L):
+    return shape if L is None else (L, *shape)
+
+
+def init_linear(key, d_in: int, d_out: int, dtype, L=None, scale=None):
+    scale = scale if scale is not None else d_in ** -0.5
+    w = jax.random.normal(key, _maybe_stack((d_in, d_out), L), jnp.float32)
+    return {"w": (w * scale).astype(dtype)}
+
+
+def linear(p, x):
+    return x @ p["w"].astype(x.dtype)
+
+
+def init_rmsnorm(d: int, dtype, L=None):
+    return {"scale": jnp.ones(_maybe_stack((d,), L), dtype)}
+
+
+def rmsnorm(p, x, eps: float = 1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return (out * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def init_embedding(key, vocab: int, d: int, dtype):
+    w = jax.random.normal(key, (vocab, d), jnp.float32) * 0.02
+    return {"w": w.astype(dtype)}
+
+
+def embed(p, ids):
+    return jnp.take(p["w"], ids, axis=0)
+
+
+def unembed(p, x):
+    """Logits from (tied or dedicated) embedding matrix."""
+    return x @ p["w"].astype(x.dtype).T
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float, positions: jax.Array):
+    """positions (L,) -> (L, head_dim/2) angles."""
+    half = head_dim // 2
+    inv = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    return positions.astype(jnp.float32)[:, None] * inv[None, :]
+
+
+def apply_rope(x: jax.Array, angles: jax.Array):
+    """x (..., L, H, D) with angles (L, D/2): rotate pairs (interleaved halves)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    cos = jnp.cos(angles)[..., :, None, :]
+    sin = jnp.sin(angles)[..., :, None, :]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d: int, f: int, dtype, L=None):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi": init_linear(k1, d, f, dtype, L),        # up
+        "wg": init_linear(k2, d, f, dtype, L),        # gate
+        "wo": init_linear(k3, f, d, dtype, L, scale=f ** -0.5),
+    }
+
+
+def mlp(p, x):
+    return linear(p["wo"], jax.nn.silu(linear(p["wg"], x)) * linear(p["wi"], x))

@@ -1,0 +1,173 @@
+"""Top-level model API used by the trainer, server, dry-run and tests.
+
+    model = build_model(cfg)
+    params = model.init(rng)
+    logits, aux = model.forward(params, batch)       # training / prefill
+    cache = model.init_cache(batch_size, max_len)
+    logits, cache = model.decode_step(params, cache, tokens, pos)
+
+Batch conventions (produced by repro.data and input_specs in launch):
+  LM            : {"tokens": (B, L) i32, "targets": (B, L) i32}
+  VLM           : + {"frontend": (B, F, d_frontend)}; tokens cover L - F text
+                  positions (image tokens occupy the first F slots)
+  audio encoder : {"frontend": (B, L, d_frontend), "targets": (B, L)}
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.dist.constraints import constrain_batch
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import transformer as T
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+    init: Callable[..., Any]
+    forward: Callable[..., Any]
+    init_cache: Callable[..., Any]
+    decode_step: Callable[..., Any]
+    param_count: Callable[[Any], int]
+    active_param_count: Callable[[Any], int]
+
+
+def init_params(key, cfg: ArchConfig):
+    ks = jax.random.split(key, 6)
+    params = {
+        "embed": L.init_embedding(ks[0], cfg.vocab, cfg.d_model, cfg.dtype),
+        "final_norm": L.init_rmsnorm(cfg.d_model, cfg.dtype),
+    }
+    params.update(T.init_stacks(ks[1], cfg))
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.init_linear(ks[2], cfg.d_model, cfg.vocab,
+                                          cfg.dtype)
+    if cfg.frontend:
+        params["frontend_proj"] = L.init_linear(
+            ks[3], cfg.d_frontend, cfg.d_model, cfg.dtype)
+    if cfg.mtp_depth:
+        k_mtp = jax.random.split(ks[4], cfg.mtp_depth)
+        params["mtp"] = {
+            "proj": L.init_linear(ks[5], 2 * cfg.d_model, cfg.d_model,
+                                  cfg.dtype),
+            "block": T.init_attn_block(k_mtp[0], cfg, cfg.mtp_depth, False),
+            "norm_h": L.init_rmsnorm(cfg.d_model, cfg.dtype),
+            "norm_e": L.init_rmsnorm(cfg.d_model, cfg.dtype),
+        }
+    return params
+
+
+def _lm_head(params, cfg: ArchConfig, x):
+    if cfg.tie_embeddings:
+        return L.unembed(params["embed"], x)
+    return L.linear(params["lm_head"], x)
+
+
+def _embed_inputs(params, batch, cfg: ArchConfig):
+    """Assemble the input sequence (B, L, D) per family."""
+    if cfg.family == "audio":
+        return L.linear(params["frontend_proj"],
+                        batch["frontend"].astype(cfg.adtype))
+    x = L.embed(params["embed"], batch["tokens"]).astype(cfg.adtype)
+    if cfg.family == "vlm" and "frontend" in batch:
+        img = L.linear(params["frontend_proj"],
+                       batch["frontend"].astype(cfg.adtype))
+        x = jnp.concatenate([img, x], axis=1)
+    return x
+
+
+def forward(params, batch, cfg: ArchConfig):
+    """Returns (logits (B, L_pred, V), aux dict).
+
+    For VLM the logits cover only the text positions (image positions are
+    dropped before the head, saving a (F x V) matmul slab).
+    """
+    x = constrain_batch(_embed_inputs(params, batch, cfg))
+    x, aux = T.forward_stacks(params, x, cfg)
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if cfg.family == "vlm" and "frontend" in batch:
+        x = x[:, batch["frontend"].shape[1]:, :]
+    logits = _lm_head(params, cfg, x)
+    if cfg.mtp_depth and "tokens" in batch:
+        aux = dict(aux)
+        aux["mtp_logits"] = _mtp_forward(params, batch, x, cfg)
+    return logits, aux
+
+
+def _mtp_forward(params, batch, h, cfg: ArchConfig):
+    """DeepSeek-V3 multi-token prediction (depth 1, simplified to the
+    published structure): h'_t = W[norm(h_t); norm(E(t_{t+1}))] -> block ->
+    shared head, predicting token t+2."""
+    p = params["mtp"]
+    nxt = jnp.roll(batch["tokens"], -1, axis=1)
+    e = L.embed(params["embed"], nxt).astype(h.dtype)
+    hcat = jnp.concatenate(
+        [L.rmsnorm(p["norm_h"], h, cfg.norm_eps),
+         L.rmsnorm(p["norm_e"], e, cfg.norm_eps)], axis=-1)
+    hm = L.linear(p["proj"], hcat)
+    blk = jax.tree.map(lambda a: a[0], p["block"])
+    hm, _ = T.attn_block(blk, hm, cfg, use_moe=False)
+    return _lm_head(params, cfg, hm)
+
+
+def decode_step(params, cache, tokens, pos, cfg: ArchConfig):
+    """tokens (B,) int32, pos scalar int32 -> (logits (B, V), cache)."""
+    x = constrain_batch(
+        L.embed(params["embed"], tokens[:, None]).astype(cfg.adtype))
+    x, cache = T.decode_stacks(params, cache, x, pos, cfg)
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return _lm_head(params, cfg, x)[:, 0], cache
+
+
+def count_params(params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+def count_active_params(params, cfg: ArchConfig) -> int:
+    """MoE: experts count at top_k/E of their size (active share)."""
+    if not cfg.n_experts:
+        return count_params(params)
+    total = 0
+    def walk(tree, in_expert):
+        nonlocal total
+        if isinstance(tree, dict):
+            for k, v in tree.items():
+                walk(v, in_expert or k in ("wi", "wg", "wo"))
+            return
+        total += tree.size
+    # Expert tensors are the (E, d, f) weights inside "blocks_moe"/"moe".
+    def walk2(tree, path):
+        nonlocal total
+        if isinstance(tree, dict):
+            for k, v in tree.items():
+                walk2(v, path + (k,))
+            return
+        if "moe" in path and path[-2:] != ("router", "w") and \
+                any(p in ("wi", "wg", "wo") for p in path) and \
+                "shared" not in path and tree.ndim >= 3 and \
+                tree.shape[-3] == cfg.n_experts:
+            total += tree.size * cfg.moe_top_k // cfg.n_experts
+        else:
+            total += tree.size
+    walk2(params, ())
+    return total
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    return Model(
+        cfg=cfg,
+        init=lambda key: init_params(key, cfg),
+        forward=lambda params, batch: forward(params, batch, cfg),
+        init_cache=lambda batch, max_len: T.init_cache(cfg, batch, max_len),
+        decode_step=lambda params, cache, tok, pos: decode_step(
+            params, cache, tok, pos, cfg),
+        param_count=count_params,
+        active_param_count=lambda p: count_active_params(p, cfg),
+    )

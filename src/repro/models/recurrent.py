@@ -1,0 +1,97 @@
+"""RecurrentGemma / Griffin (arXiv:2402.19427) recurrent block.
+
+Structure per recurrent block:
+    branch 1: W_x -> temporal Conv1D (width 4, causal, BP-im2col engine)
+              -> RG-LRU
+    branch 2: W_gate -> GeLU
+    merge   : elementwise product -> W_out
+
+RG-LRU recurrence (diagonal, so associative-scan friendly):
+    r_t = sigmoid(W_r x_t),  i_t = sigmoid(W_i x_t)
+    a_t = exp(-c * softplus(lambda) * r_t)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core import depthwise_causal_conv1d
+from repro.models import layers as L
+
+RG_C = 8.0
+
+
+def rec_width(cfg: ArchConfig) -> int:
+    return cfg.rglru_width or cfg.d_model
+
+
+def init_recurrent(key, cfg: ArchConfig, nl=None):
+    d, w = cfg.d_model, rec_width(cfg)
+    ks = jax.random.split(key, 6)
+    shape = lambda *s: s if nl is None else (nl, *s)
+    return {
+        "wx": L.init_linear(ks[0], d, w, cfg.dtype, nl),
+        "wgate": L.init_linear(ks[1], d, w, cfg.dtype, nl),
+        "conv_w": {"w": (jax.random.normal(ks[2], shape(cfg.rglru_conv, w),
+                                           jnp.float32) * 0.2).astype(cfg.dtype)},
+        "wr": L.init_linear(ks[3], w, w, cfg.dtype, nl),
+        "wi": L.init_linear(ks[4], w, w, cfg.dtype, nl),
+        "lam": {"w": jnp.full(shape(w), 0.65, jnp.float32)},  # softplus^-1 spread
+        "wout": L.init_linear(ks[5], w, d, cfg.dtype, nl, scale=w ** -0.5),
+    }
+
+
+def _rglru_scan(x, r, i, lam):
+    """Full-sequence RG-LRU via associative scan.  x,r,i (B,L,W)."""
+    log_a = -RG_C * jax.nn.softplus(lam)[None, None, :] * r      # (B,L,W) <= 0
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * x)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b1 * a2 + b2
+
+    a_seq, h_seq = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    return h_seq
+
+
+def recurrent_block(p, x, cfg: ArchConfig):
+    """x (B, L, D) -> (B, L, D), full-sequence."""
+    xb = L.linear(p["wx"], x)                                    # (B,L,W)
+    xb = depthwise_causal_conv1d(xb, p["conv_w"]["w"], mode=cfg.conv_mode)
+    r = jax.nn.sigmoid(L.linear(p["wr"], xb).astype(jnp.float32))
+    i = jax.nn.sigmoid(L.linear(p["wi"], xb).astype(jnp.float32))
+    h = _rglru_scan(xb.astype(jnp.float32), r, i, p["lam"]["w"])
+    gate = jax.nn.gelu(L.linear(p["wgate"], x))
+    return L.linear(p["wout"], (h.astype(x.dtype) * gate))
+
+
+def recurrent_init_state(cfg: ArchConfig, batch: int, nl: int):
+    w = rec_width(cfg)
+    return {
+        "h": jnp.zeros((nl, batch, w), jnp.float32),
+        "conv": jnp.zeros((nl, batch, cfg.rglru_conv - 1, w), cfg.adtype),
+    }
+
+
+def recurrent_decode(p, x, h_state, conv_state, cfg: ArchConfig):
+    """Single-token step.  x (B,1,D)."""
+    xb = L.linear(p["wx"], x)[:, 0]                              # (B,W)
+    hist = jnp.concatenate(
+        [conv_state, xb[:, None, :].astype(conv_state.dtype)], axis=1)
+    w = p["conv_w"]["w"].astype(hist.dtype)
+    xc = jnp.einsum("bkc,kc->bc", hist, w)
+    new_conv_state = hist[:, 1:]
+    r = jax.nn.sigmoid(L.linear(p["wr"], xc).astype(jnp.float32))
+    i = jax.nn.sigmoid(L.linear(p["wi"], xc).astype(jnp.float32))
+    log_a = -RG_C * jax.nn.softplus(p["lam"]["w"])[None] * r
+    a = jnp.exp(log_a)
+    new_h = a * h_state + jnp.sqrt(jnp.maximum(1 - a * a, 1e-12)) \
+        * (i * xc.astype(jnp.float32))
+    gate = jax.nn.gelu(L.linear(p["wgate"], x))[:, 0]
+    out = L.linear(p["wout"], new_h.astype(x.dtype) * gate)
+    return out[:, None, :], new_h, new_conv_state

@@ -1,0 +1,300 @@
+"""Block assembly: stacked-parameter blocks executed under jax.lax.scan.
+
+All layers of a kind share one stacked param pytree (leading dim = #layers),
+so an 80-layer model lowers as ONE scanned block body -- compile time and HLO
+size stay flat in depth, which matters for the 40-cell x 2-mesh dry-run.
+
+Families:
+  dense / vlm / audio : single stack of attention blocks
+  moe                 : dense stack (first_dense_layers) + MoE stack
+  hybrid              : stack of (rec, rec, attn) super-blocks + remainder recs
+  ssm                 : stack of mamba2 blocks
+
+Decode variants scan the same stacks with per-layer cache slices as scan xs.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+# Roofline runs set REPRO_SCAN_UNROLL=9999: XLA's cost model does not
+# multiply while-loop bodies by trip count, so the dry-run unrolls the layer
+# scan to make cost_analysis()['flops'] reflect all layers.
+SCAN_UNROLL = int(os.environ.get("REPRO_SCAN_UNROLL", "1"))
+
+from repro.configs.base import ArchConfig
+from repro.dist.constraints import constrain_batch
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import mamba2 as M
+from repro.models import moe as MOE
+from repro.models import recurrent as R
+
+
+# ---------------------------------------------------------------------------
+# Per-kind block init
+# ---------------------------------------------------------------------------
+
+def init_attn_block(key, cfg: ArchConfig, nl: int, use_moe: bool):
+    k1, k2, k3 = jax.random.split(key, 3)
+    attn = (A.init_mla(k1, cfg, nl) if cfg.use_mla
+            else A.init_gqa(k1, cfg, nl))
+    p = {"ln1": L.init_rmsnorm(cfg.d_model, cfg.dtype, nl),
+         "attn": attn,
+         "ln2": L.init_rmsnorm(cfg.d_model, cfg.dtype, nl)}
+    if use_moe:
+        p["moe"] = MOE.init_moe(k2, cfg, nl)
+    else:
+        p["mlp"] = L.init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.dtype, nl)
+    return p
+
+
+def init_rec_block(key, cfg: ArchConfig, nl: int):
+    k1, k2 = jax.random.split(key)
+    return {"ln1": L.init_rmsnorm(cfg.d_model, cfg.dtype, nl),
+            "rec": R.init_recurrent(k1, cfg, nl),
+            "ln2": L.init_rmsnorm(cfg.d_model, cfg.dtype, nl),
+            "mlp": L.init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.dtype, nl)}
+
+
+def init_ssm_block(key, cfg: ArchConfig, nl: int):
+    return {"ln": L.init_rmsnorm(cfg.d_model, cfg.dtype, nl),
+            "ssm": M.init_mamba2(key, cfg, nl)}
+
+
+# ---------------------------------------------------------------------------
+# Per-kind block apply (single layer; params already sliced by scan)
+# ---------------------------------------------------------------------------
+
+def attn_block(p, x, cfg: ArchConfig, *, use_moe: bool, window=None):
+    x = constrain_batch(x)
+    h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if cfg.use_mla:
+        x = x + A.mla_train(p["attn"], h, cfg)
+    else:
+        x = x + A.gqa_train(p["attn"], h, cfg, window=window)
+    x = constrain_batch(x)
+    h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if use_moe:
+        y, aux = MOE.moe_apply(p["moe"], h, cfg)
+        return constrain_batch(x + y), aux
+    return constrain_batch(x + L.mlp(p["mlp"], h)), {}
+
+
+def rec_block(p, x, cfg: ArchConfig):
+    x = constrain_batch(x)
+    h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    x = constrain_batch(x + R.recurrent_block(p["rec"], h, cfg))
+    h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+    return constrain_batch(x + L.mlp(p["mlp"], h))
+
+
+def ssm_block(p, x, cfg: ArchConfig):
+    x = constrain_batch(x)
+    h = L.rmsnorm(p["ln"], x, cfg.norm_eps)
+    return constrain_batch(x + M.mamba2_block(p["ssm"], h, cfg))
+
+
+def _maybe_remat(fn, cfg: ArchConfig):
+    # REPRO_REMAT overrides the config policy (perf-iteration lever, §Perf):
+    # "none" drops per-block rematerialization (recompute flops saved,
+    # activation memory paid), "block" forces it.
+    policy = os.environ.get("REPRO_REMAT", cfg.remat)
+    return jax.checkpoint(fn) if policy == "block" else fn
+
+
+def _scan_stack(body, stacked_params, x):
+    """body(params_slice, x) -> (x, aux); aux accumulated (summed)."""
+    def step(carry, pslice):
+        y, aux = body(pslice, carry)
+        return y, aux
+
+    nl = jax.tree.leaves(stacked_params)[0].shape[0]
+    x, auxs = jax.lax.scan(step, x, stacked_params,
+                           unroll=min(SCAN_UNROLL, nl))
+    aux = {k: v.sum() for k, v in auxs.items()} if auxs else {}
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# Full-stack forward per family
+# ---------------------------------------------------------------------------
+
+def init_stacks(key, cfg: ArchConfig):
+    ks = jax.random.split(key, 4)
+    if cfg.family in ("dense", "vlm", "audio"):
+        return {"blocks": init_attn_block(ks[0], cfg, cfg.n_layers, False)}
+    if cfg.family == "moe":
+        nd = cfg.first_dense_layers
+        out = {}
+        if nd:
+            out["blocks_dense"] = init_attn_block(ks[0], cfg, nd, False)
+        out["blocks_moe"] = init_attn_block(ks[1], cfg, cfg.n_layers - nd, True)
+        return out
+    if cfg.family == "hybrid":
+        period = len(cfg.layer_pattern)
+        n_super = cfg.n_layers // period
+        n_extra = cfg.n_layers - n_super * period
+        out = {"super": {
+            "rec1": init_rec_block(ks[0], cfg, n_super),
+            "rec2": init_rec_block(ks[1], cfg, n_super),
+            "attn": init_attn_block(ks[2], cfg, n_super, False),
+        }}
+        if n_extra:
+            out["extra"] = init_rec_block(ks[3], cfg, n_extra)
+        return out
+    if cfg.family == "ssm":
+        return {"blocks": init_ssm_block(ks[0], cfg, cfg.n_layers)}
+    raise ValueError(cfg.family)
+
+
+def forward_stacks(params, x, cfg: ArchConfig):
+    """x (B, L, D) -> (x, aux) through all blocks."""
+    aux = {}
+    if cfg.family in ("dense", "vlm", "audio"):
+        body = _maybe_remat(
+            lambda p, h: attn_block(p, h, cfg, use_moe=False), cfg)
+        x, aux = _scan_stack(body, params["blocks"], x)
+    elif cfg.family == "moe":
+        if "blocks_dense" in params:
+            body = _maybe_remat(
+                lambda p, h: attn_block(p, h, cfg, use_moe=False), cfg)
+            x, _ = _scan_stack(body, params["blocks_dense"], x)
+        body = _maybe_remat(
+            lambda p, h: attn_block(p, h, cfg, use_moe=True), cfg)
+        x, aux = _scan_stack(body, params["blocks_moe"], x)
+    elif cfg.family == "hybrid":
+        def super_block(p, h):
+            h = rec_block(p["rec1"], h, cfg)
+            h = rec_block(p["rec2"], h, cfg)
+            h, _ = attn_block(p["attn"], h, cfg, use_moe=False,
+                              window=cfg.local_window)
+            return h, {}
+        x, _ = _scan_stack(_maybe_remat(super_block, cfg), params["super"], x)
+        if "extra" in params:
+            body = _maybe_remat(lambda p, h: (rec_block(p, h, cfg), {}), cfg)
+            x, _ = _scan_stack(body, params["extra"], x)
+    elif cfg.family == "ssm":
+        body = _maybe_remat(lambda p, h: (ssm_block(p, h, cfg), {}), cfg)
+        x, _ = _scan_stack(body, params["blocks"], x)
+    else:
+        raise ValueError(cfg.family)
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# Decode (single token) through the stacks, cache as scan xs
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int):
+    if cfg.family in ("dense", "vlm"):
+        return {"blocks": A.gqa_init_cache(cfg, batch, max_len, cfg.n_layers)}
+    if cfg.family == "moe":
+        nd = cfg.first_dense_layers
+        mk = A.mla_init_cache if cfg.use_mla else A.gqa_init_cache
+        out = {}
+        if nd:
+            out["blocks_dense"] = mk(cfg, batch, max_len, nd)
+        out["blocks_moe"] = mk(cfg, batch, max_len, cfg.n_layers - nd)
+        return out
+    if cfg.family == "hybrid":
+        period = len(cfg.layer_pattern)
+        n_super = cfg.n_layers // period
+        n_extra = cfg.n_layers - n_super * period
+        cache_len = min(max_len, cfg.local_window or max_len)
+        out = {"super": {
+            "rec1": R.recurrent_init_state(cfg, batch, n_super),
+            "rec2": R.recurrent_init_state(cfg, batch, n_super),
+            "attn": A.gqa_init_cache(cfg, batch, max_len, n_super),
+        }}
+        if n_extra:
+            out["extra"] = R.recurrent_init_state(cfg, batch, n_extra)
+        return out
+    if cfg.family == "ssm":
+        return {"blocks": M.mamba2_init_state(cfg, batch, cfg.n_layers)}
+    raise ValueError(cfg.family)
+
+
+def _scan_decode(body, stacked_params, cache, x):
+    """body(pslice, cache_slice, x) -> (x, new_cache_slice)."""
+    def step(carry, xs):
+        pslice, cslice = xs
+        y, new_c = body(pslice, cslice, carry)
+        return y, new_c
+
+    nl = jax.tree.leaves(stacked_params)[0].shape[0]
+    return jax.lax.scan(step, x, (stacked_params, cache),
+                        unroll=min(SCAN_UNROLL, nl))
+
+
+def decode_stacks(params, cache, x, pos, cfg: ArchConfig):
+    """x (B,1,D), pos scalar int -> (x, new_cache)."""
+    new_cache = {}
+    if cfg.family in ("dense", "vlm", "moe"):
+        def body_factory(use_mla):
+            def body(p, c, h):
+                hn = L.rmsnorm(p["ln1"], h, cfg.norm_eps)
+                if use_mla:
+                    o, ck, kr = A.mla_decode(p["attn"], hn, c["c_kv"],
+                                             c["k_rope"], pos, cfg)
+                    nc = {"c_kv": ck, "k_rope": kr}
+                else:
+                    o, k, v = A.gqa_decode(p["attn"], hn, c["k"], c["v"],
+                                           pos, cfg)
+                    nc = {"k": k, "v": v}
+                h = h + o
+                hn = L.rmsnorm(p["ln2"], h, cfg.norm_eps)
+                if "moe" in p:
+                    # Decode: capacity = #tokens so no token is ever dropped
+                    # (drops are a throughput knob for training only).
+                    y, _ = MOE.moe_apply(p["moe"], hn, cfg,
+                                         capacity=hn.shape[0] * hn.shape[1])
+                    h = h + y
+                else:
+                    h = h + L.mlp(p["mlp"], hn)
+                return h, nc
+            return body
+        for name in ("blocks", "blocks_dense", "blocks_moe"):
+            if name in params:
+                x, nc = _scan_decode(body_factory(cfg.use_mla),
+                                     params[name], cache[name], x)
+                new_cache[name] = nc
+    elif cfg.family == "hybrid":
+        def rec_body(p, c, h):
+            hn = L.rmsnorm(p["ln1"], h, cfg.norm_eps)
+            o, nh, ncv = R.recurrent_decode(p["rec"], hn, c["h"], c["conv"], cfg)
+            h = h + o
+            hn = L.rmsnorm(p["ln2"], h, cfg.norm_eps)
+            return h + L.mlp(p["mlp"], hn), {"h": nh, "conv": ncv}
+
+        def super_body(p, c, h):
+            h, c1 = rec_body(p["rec1"], c["rec1"], h)
+            h, c2 = rec_body(p["rec2"], c["rec2"], h)
+            hn = L.rmsnorm(p["attn"]["ln1"], h, cfg.norm_eps)
+            o, k, v = A.gqa_decode(p["attn"]["attn"], hn, c["attn"]["k"],
+                                   c["attn"]["v"], pos, cfg,
+                                   window=cfg.local_window)
+            h = h + o
+            hn = L.rmsnorm(p["attn"]["ln2"], h, cfg.norm_eps)
+            h = h + L.mlp(p["attn"]["mlp"], hn)
+            return h, {"rec1": c1, "rec2": c2, "attn": {"k": k, "v": v}}
+
+        x, nc = _scan_decode(super_body, params["super"], cache["super"], x)
+        new_cache["super"] = nc
+        if "extra" in params:
+            x, nc = _scan_decode(rec_body, params["extra"], cache["extra"], x)
+            new_cache["extra"] = nc
+    elif cfg.family == "ssm":
+        def body(p, c, h):
+            hn = L.rmsnorm(p["ln"], h, cfg.norm_eps)
+            o, ns, ncv = M.mamba2_decode(p["ssm"], hn, c["ssm"], c["conv"], cfg)
+            return h + o, {"ssm": ns, "conv": ncv}
+        x, nc = _scan_decode(body, params["blocks"], cache["blocks"], x)
+        new_cache["blocks"] = nc
+    else:
+        raise ValueError(cfg.family)
+    return x, new_cache

@@ -1,0 +1,5 @@
+from repro.optim.adamw import AdamWConfig, init_state, apply_updates, global_norm
+from repro.optim.schedule import SCHEDULES, wsd, warmup_cosine, default_schedule_for
+
+__all__ = ["AdamWConfig", "init_state", "apply_updates", "global_norm",
+           "SCHEDULES", "wsd", "warmup_cosine", "default_schedule_for"]

@@ -1,0 +1,45 @@
+"""Learning-rate schedules: cosine, linear, and WSD (warmup-stable-decay).
+
+WSD (arXiv:2404.06395, MiniCPM) is the default schedule for minicpm-2b: a
+linear warmup, a long stable plateau, then a short (10%) exponential-ish
+decay -- enabling continual training from any plateau checkpoint.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, *, peak_lr: float, warmup: int, total: int,
+                  final_frac: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * step / jnp.maximum(warmup, 1)
+    prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+    cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < warmup, warm, peak_lr * cos)
+
+
+def wsd(step, *, peak_lr: float, warmup: int, total: int,
+        decay_frac: float = 0.1, final_frac: float = 0.01):
+    """Warmup -> stable plateau -> decay over the last decay_frac of steps."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * step / jnp.maximum(warmup, 1)
+    decay_start = total * (1 - decay_frac)
+    prog = jnp.clip((step - decay_start) / jnp.maximum(total - decay_start, 1),
+                    0, 1)
+    decay = peak_lr * jnp.exp(jnp.log(final_frac) * prog)
+    stable = jnp.full_like(step, peak_lr)
+    out = jnp.where(step < warmup, warm,
+                    jnp.where(step < decay_start, stable, decay))
+    return out
+
+
+def constant(step, *, peak_lr: float, **_):
+    return jnp.full_like(jnp.asarray(step, jnp.float32), peak_lr)
+
+
+SCHEDULES = {"cosine": warmup_cosine, "wsd": wsd, "constant": constant}
+
+
+def default_schedule_for(arch_name: str) -> str:
+    return "wsd" if "minicpm" in arch_name else "cosine"

@@ -1,0 +1,4 @@
+from repro.train.train_step import make_train_step, loss_fn
+from repro.train.losses import train_loss, softmax_xent
+
+__all__ = ["make_train_step", "loss_fn", "train_loss", "softmax_xent"]

@@ -1,0 +1,45 @@
+"""Loss functions: token CE (with z-loss), MoE aux weighting, MTP aux head."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+MOE_LB_WEIGHT = 0.01
+MOE_Z_WEIGHT = 1e-4
+MTP_WEIGHT = 0.3
+Z_LOSS_WEIGHT = 1e-4
+
+
+def softmax_xent(logits, targets, mask=None):
+    """Mean CE over (optionally masked) positions; logits f32-promoted."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    ce = logz - gold
+    zl = Z_LOSS_WEIGHT * logz ** 2
+    per_tok = ce + zl
+    if mask is not None:
+        per_tok = per_tok * mask
+        return per_tok.sum() / jnp.maximum(mask.sum(), 1.0)
+    return per_tok.mean()
+
+
+def train_loss(logits, aux, batch):
+    """Total loss: CE + MoE aux + MTP (predicting t+2 where defined)."""
+    loss = softmax_xent(logits, batch["targets"], batch.get("loss_mask"))
+    metrics = {"ce": loss}
+    if "moe_lb" in aux:
+        loss = loss + MOE_LB_WEIGHT * aux["moe_lb"] + MOE_Z_WEIGHT * aux["moe_z"]
+        metrics["moe_lb"] = aux["moe_lb"]
+    if "mtp_logits" in aux:
+        # MTP head at position t predicts token t+2 = targets shifted by 1.
+        t2 = jnp.roll(batch["targets"], -1, axis=1)
+        mask = jnp.ones_like(t2, jnp.float32).at[:, -1].set(0.0)
+        if "loss_mask" in batch:
+            mask = mask * batch["loss_mask"]
+        mtp = softmax_xent(aux["mtp_logits"], t2, mask)
+        loss = loss + MTP_WEIGHT * mtp
+        metrics["mtp_ce"] = mtp
+    metrics["loss"] = loss
+    return loss, metrics

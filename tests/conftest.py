@@ -1,0 +1,15 @@
+import os
+import sys
+
+# Tests run on the host's single CPU device (the dry-run sets its own 512-
+# device flag in a separate process; never set it here).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.RandomState(0)

@@ -1,0 +1,110 @@
+"""Distributed runtime tests.
+
+The dry-run proves lowering/compilation on the production meshes; these
+tests prove the sharded step EXECUTES correctly by running it on 8 virtual
+CPU devices in a subprocess (the flag must be set before jax initializes,
+hence the isolation), and that checkpoints restore elastically onto a
+different sharding than they were saved from.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys, json
+    sys.path.insert(0, os.path.join(%(root)r, "src"))
+    import jax, jax.numpy as jnp
+    import numpy as np
+    from repro.configs import get_smoke_config
+    from repro.dist import sharding as SH
+    from repro.dist.constraints import set_activation_policy
+    from repro.models import model as M
+    from repro.optim import adamw
+    from repro.train import train_step as TS
+
+    assert len(jax.devices()) == 8, jax.devices()
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    cfg = get_smoke_config("smollm_360m")
+    model = M.build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = adamw.init_state(params)
+    set_activation_policy(("data",))
+
+    p_sh = SH.to_shardings(SH.param_specs(params, mesh), mesh)
+    o_sh = SH.to_shardings(SH.opt_state_specs(params, mesh), mesh)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (8, 64), 0, cfg.vocab)
+    batch = {"tokens": toks, "targets": toks}
+    b_sh = SH.to_shardings(SH.batch_specs(batch, mesh), mesh)
+
+    with mesh:
+        params_d = jax.device_put(params, p_sh)
+        opt_d = jax.device_put(opt, o_sh)
+        batch_d = jax.device_put(batch, b_sh)
+        step = jax.jit(TS.make_train_step(cfg, adamw.AdamWConfig(peak_lr=1e-3),
+                                          total_steps=10, warmup=1),
+                       in_shardings=(p_sh, o_sh, b_sh, None),
+                       out_shardings=(p_sh, o_sh, None))
+        losses = []
+        p, o = params_d, opt_d
+        for s in range(3):
+            p, o, m = step(p, o, batch_d, jnp.int32(s))
+            losses.append(float(m["loss"]))
+
+    # single-device reference: identical math
+    step1 = jax.jit(TS.make_train_step(cfg, adamw.AdamWConfig(peak_lr=1e-3),
+                                       total_steps=10, warmup=1))
+    p1, o1 = params, opt
+    ref = []
+    for s in range(3):
+        p1, o1, m1 = step1(p1, o1, batch, jnp.int32(s))
+        ref.append(float(m1["loss"]))
+    print(json.dumps({"sharded": losses, "single": ref}))
+""")
+
+
+def test_sharded_train_step_executes_and_matches_single_device():
+    out = subprocess.run(
+        [sys.executable, "-c", _SCRIPT % {"root": ROOT}],
+        capture_output=True, text=True, timeout=600, cwd=ROOT)
+    assert out.returncode == 0, out.stderr[-3000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    np.testing.assert_allclose(res["sharded"], res["single"],
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_elastic_checkpoint_restore_onto_new_sharding(tmp_path):
+    """Save unsharded, restore with an explicit sharding tree (the elastic
+    resume path used after a mesh-shape change)."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.ckpt import checkpoint as CKPT
+
+    tree = {"w": np.arange(64, dtype=np.float32).reshape(8, 8),
+            "b": np.ones(8, np.float32)}
+    CKPT.save(str(tmp_path), 5, tree)
+    mesh = jax.make_mesh((1,), ("data",))
+    shardings = {"w": NamedSharding(mesh, P("data", None)),
+                 "b": NamedSharding(mesh, P())}
+    step, restored = CKPT.restore(str(tmp_path), shardings=shardings)
+    assert step == 5
+    assert restored["w"].sharding.is_equivalent_to(shardings["w"], 2)
+    np.testing.assert_array_equal(np.asarray(restored["w"]), tree["w"])
+
+
+def test_multipod_mesh_shape():
+    """make_production_mesh contract (function, not module constant)."""
+    import inspect
+    from repro.launch import mesh as mesh_mod
+    assert inspect.isfunction(mesh_mod.make_production_mesh)
+    src = inspect.getsource(mesh_mod.make_production_mesh)
+    assert "(2, 16, 16)" in src and "(16, 16)" in src

@@ -1,0 +1,136 @@
+"""Per-kernel allclose tests: Pallas (interpret=True) vs pure-jnp oracles,
+swept over shapes, strides and dtypes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.im2col_ref import ConvDims, conv2d_lax, conv_grads_lax
+from repro.kernels import ops, ref
+from repro.kernels.matmul import matmul
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels import tap_gemm as tg
+
+CONV_CASES = [
+    ConvDims(B=2, C=3, H_i=8, W_i=8, N=4, K_h=3, K_w=3, S=2, P_h=1, P_w=1),
+    ConvDims(B=1, C=2, H_i=9, W_i=9, N=3, K_h=3, K_w=3, S=2, P_h=0, P_w=0),
+    ConvDims(B=1, C=2, H_i=8, W_i=8, N=3, K_h=1, K_w=1, S=2, P_h=0, P_w=0),
+    ConvDims(B=2, C=2, H_i=12, W_i=12, N=3, K_h=3, K_w=3, S=3, P_h=1, P_w=1),
+    ConvDims(B=1, C=3, H_i=8, W_i=8, N=4, K_h=3, K_w=3, S=1, P_h=1, P_w=1),
+    ConvDims(B=1, C=130, H_i=6, W_i=6, N=140, K_h=3, K_w=3, S=2, P_h=1, P_w=1),
+]
+
+
+def _data(d, dtype=jnp.float32, seed=0):
+    r = np.random.RandomState(seed)
+    x = jnp.asarray(r.randn(d.B, d.C, d.H_i, d.W_i), dtype)
+    w = jnp.asarray(r.randn(d.N, d.C, d.K_h, d.K_w), dtype)
+    dy = jnp.asarray(r.randn(d.B, d.N, d.H_o, d.W_o), dtype)
+    return x, w, dy
+
+
+@pytest.mark.parametrize("d", CONV_CASES,
+                         ids=lambda d: f"S{d.S}K{d.K_h}C{d.C}N{d.N}")
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16], ids=["f32", "bf16"])
+class TestConvKernels:
+    def test_forward(self, d, dtype):
+        x, w, dy = _data(d, dtype)
+        tol = 2e-4 if dtype == jnp.float32 else 6e-2
+        got = ops.conv2d_forward(x, w, d)
+        want = conv2d_lax(x.astype(jnp.float32), w.astype(jnp.float32), d)
+        np.testing.assert_allclose(np.asarray(got, np.float32), want,
+                                   rtol=tol, atol=tol * 10)
+
+    def test_input_grad(self, d, dtype):
+        x, w, dy = _data(d, dtype)
+        tol = 2e-4 if dtype == jnp.float32 else 6e-2
+        want, _ = conv_grads_lax(x.astype(jnp.float32),
+                                 w.astype(jnp.float32),
+                                 dy.astype(jnp.float32), d)
+        got = ops.conv2d_input_grad(dy, w, d)
+        np.testing.assert_allclose(np.asarray(got, np.float32), want,
+                                   rtol=tol, atol=tol * 10)
+
+    def test_weight_grad(self, d, dtype):
+        x, w, dy = _data(d, dtype)
+        tol = 2e-3 if dtype == jnp.float32 else 1e-1
+        _, want = conv_grads_lax(x.astype(jnp.float32),
+                                 w.astype(jnp.float32),
+                                 dy.astype(jnp.float32), d)
+        got = ops.conv2d_weight_grad(x, dy, d)
+        np.testing.assert_allclose(np.asarray(got, np.float32), want,
+                                   rtol=tol, atol=tol * 20)
+
+
+@pytest.mark.parametrize("m,k,n", [(64, 64, 64), (200, 300, 150),
+                                   (128, 256, 128), (1, 7, 3)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16], ids=["f32", "bf16"])
+def test_matmul_kernel(m, k, n, dtype):
+    r = np.random.RandomState(1)
+    a = jnp.asarray(r.randn(m, k), dtype)
+    b = jnp.asarray(r.randn(k, n), dtype)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(
+        np.asarray(matmul(a, b), np.float32),
+        np.asarray(ref.matmul_ref(a, b), np.float32), rtol=tol, atol=tol * 10)
+
+
+@pytest.mark.parametrize("b,h,lq,lk,dd,causal", [
+    (2, 4, 128, 128, 64, True),
+    (1, 2, 200, 200, 32, True),
+    (1, 2, 100, 100, 32, False),
+    (1, 2, 1, 77, 32, True),          # decode-style
+    (1, 1, 64, 64, 128, True),
+])
+def test_flash_attention(b, h, lq, lk, dd, causal):
+    r = np.random.RandomState(2)
+    q = jnp.asarray(r.randn(b, h, lq, dd), jnp.float32)
+    k = jnp.asarray(r.randn(b, h, lk, dd), jnp.float32)
+    v = jnp.asarray(r.randn(b, h, lk, dd), jnp.float32)
+    got = flash_attention(q, k, v, causal=causal)
+    want = ref.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+def test_tap_gemm_against_oracle():
+    r = np.random.RandomState(3)
+    src = jnp.asarray(r.randn(4, 2, 6, 6, 8), jnp.float32)
+    taps = [(0, 0, 0), (1, 0, 1), (2, 1, 0), (3, 1, 1)]
+    w = jnp.asarray(r.randn(len(taps), 8, 16), jnp.float32)
+    got = tg.tap_gemm(src, w, taps, 5, 5, cin_tile=8, cout_tile=16)
+    want = ref.tap_gemm_ref(src, w, taps, 5, 5)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_tap_wgrad_against_oracle():
+    r = np.random.RandomState(4)
+    src = jnp.asarray(r.randn(4, 3, 6, 6, 8), jnp.float32)
+    taps = [(0, 0, 0), (1, 0, 1), (2, 1, 0)]
+    dy = jnp.asarray(r.randn(3, 5, 5, 16), jnp.float32)
+    got = tg.tap_wgrad(src, dy, taps, 5, 5, cin_tile=8, cout_tile=16)
+    want = ref.tap_wgrad_ref(src, dy, taps, 5, 5)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(hi=st.integers(4, 12), k=st.integers(1, 3), s=st.integers(1, 3),
+       c=st.integers(1, 4), n=st.integers(1, 4), seed=st.integers(0, 999))
+def test_property_pallas_matches_lax(hi, k, s, c, n, seed):
+    p = min(k - 1, 1)
+    if hi + 2 * p < k:
+        return
+    d = ConvDims(B=1, C=c, H_i=hi, W_i=hi, N=n, K_h=k, K_w=k,
+                 S=s, P_h=p, P_w=p)
+    if d.H_o < 1:
+        return
+    x, w, dy = _data(d, seed=seed)
+    want_y = conv2d_lax(x, w, d)
+    di, dw = conv_grads_lax(x, w, dy, d)
+    np.testing.assert_allclose(ops.conv2d_forward(x, w, d), want_y,
+                               rtol=5e-4, atol=5e-4)
+    np.testing.assert_allclose(ops.conv2d_input_grad(dy, w, d), di,
+                               rtol=5e-4, atol=5e-4)
+    np.testing.assert_allclose(ops.conv2d_weight_grad(x, dy, d), dw,
+                               rtol=5e-3, atol=5e-3)
