@@ -1,12 +1,22 @@
 """Kernel microbenchmarks: wall-clock of the three conv backprop engines and
 the Pallas kernels (interpret mode) on CPU, plus derived bytes-moved ratios.
 
+Two levels are measured per case:
+  * raw engine primitives (input_grad_*, weight_grad_*), as before;
+  * the end-to-end ``jax.grad`` path through the ``conv2d`` custom_vjp --
+    what a training step actually runs per mode.
+
 interpret-mode wall-clock is NOT TPU performance; the derived columns
 (bytes/elements moved) are the hardware-independent quantities.
+
+    PYTHONPATH=src python benchmarks/bench_kernels.py [--tiny]
+
+``--tiny`` runs one small shape with 1 rep (the CI smoke lane).
 """
 
 from __future__ import annotations
 
+import argparse
 import sys
 import time
 
@@ -17,6 +27,7 @@ import numpy as np
 sys.path.insert(0, "src")
 
 from repro.core import bpim2col, im2col_ref, phase_decomp   # noqa: E402
+from repro.core.conv import conv2d                          # noqa: E402
 from repro.core.im2col_ref import ConvDims                  # noqa: E402
 
 CASES = [
@@ -24,6 +35,12 @@ CASES = [
     ConvDims(B=2, C=32, H_i=28, W_i=28, N=32, K_h=3, K_w=3, S=2, P_h=1, P_w=1),
     ConvDims(B=1, C=64, H_i=14, W_i=14, N=128, K_h=1, K_w=1, S=2, P_h=0, P_w=0),
 ]
+
+TINY_CASES = [
+    ConvDims(B=1, C=4, H_i=12, W_i=12, N=8, K_h=3, K_w=3, S=2, P_h=1, P_w=1),
+]
+
+GRAD_MODES = ("traditional", "bp_im2col", "bp_phase")
 
 
 def _t(fn, *args, reps=5):
@@ -34,20 +51,32 @@ def _t(fn, *args, reps=5):
     return (time.perf_counter() - t0) / reps * 1e6
 
 
-def run(csv=True):
+def _grad_fn(d: ConvDims, mode: str):
+    """jit'd jax.grad through the conv2d custom_vjp for one mode."""
+    pad = ((d.P_h, d.p_h_hi), (d.P_w, d.p_w_hi))
+
+    @jax.jit
+    def g(x, w):
+        return jax.grad(
+            lambda a, b: jnp.sum(conv2d(a, b, d.S, pad, mode) ** 2),
+            argnums=(0, 1))(x, w)
+    return g
+
+
+def run(csv=True, cases=None, reps=5, grad_modes=GRAD_MODES):
     rng = np.random.RandomState(0)
     rows = []
-    for d in CASES:
+    for d in cases or CASES:
         x = jnp.asarray(rng.randn(d.B, d.C, d.H_i, d.W_i), jnp.float32)
         w = jnp.asarray(rng.randn(d.N, d.C, d.K_h, d.K_w), jnp.float32)
         dy = jnp.asarray(rng.randn(d.B, d.N, d.H_o, d.W_o), jnp.float32)
-        t_trad = _t(jax.jit(lambda a, b: im2col_ref.input_grad_explicit(a, b, d)), dy, w)
-        t_bp = _t(jax.jit(lambda a, b: bpim2col.input_grad_implicit(a, b, d)), dy, w)
-        t_ph = _t(jax.jit(lambda a, b: phase_decomp.input_grad_phase(a, b, d)), dy, w)
-        tg_trad = _t(jax.jit(lambda a, b: im2col_ref.weight_grad_explicit(a, b, d)), x, dy)
-        tg_ph = _t(jax.jit(lambda a, b: phase_decomp.weight_grad_phase(a, b, d)), x, dy)
+        t_trad = _t(jax.jit(lambda a, b: im2col_ref.input_grad_explicit(a, b, d)), dy, w, reps=reps)
+        t_bp = _t(jax.jit(lambda a, b: bpim2col.input_grad_implicit(a, b, d)), dy, w, reps=reps)
+        t_ph = _t(jax.jit(lambda a, b: phase_decomp.input_grad_phase(a, b, d)), dy, w, reps=reps)
+        tg_trad = _t(jax.jit(lambda a, b: im2col_ref.weight_grad_explicit(a, b, d)), x, dy, reps=reps)
+        tg_ph = _t(jax.jit(lambda a, b: phase_decomp.weight_grad_phase(a, b, d)), x, dy, reps=reps)
         sparsity = bpim2col.lowered_sparsity_loss(d)
-        rows.append({
+        row = {
             "case": f"{d.H_i}/{d.C}/{d.N}/{d.K_h}/{d.S}/{d.P_h}",
             "dI_trad_us": round(t_trad, 1),
             "dI_bp_gather_us": round(t_bp, 1),
@@ -57,14 +86,32 @@ def run(csv=True):
             "dW_phase_us": round(tg_ph, 1),
             "dW_speedup_phase": round(tg_trad / tg_ph, 2),
             "lowered_sparsity": round(sparsity, 3),
-        })
+        }
+        # End-to-end jax.grad through the custom_vjp (the training path).
+        for mode in grad_modes:
+            row[f"grad_{mode}_us"] = round(_t(_grad_fn(d, mode), x, w,
+                                              reps=reps), 1)
+        rows.append(row)
     if csv:
-        print("kern_case,dI_trad_us,dI_bp_us,dI_phase_us,dI_spd,"
-              "dW_trad_us,dW_phase_us,dW_spd,sparsity")
+        print(",".join(rows[0].keys()))
         for r in rows:
             print(",".join(str(v) for v in r.values()))
     return rows
 
 
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="one small shape, 1 rep (CI smoke)")
+    args = ap.parse_args()
+    if args.tiny:
+        rows = run(cases=TINY_CASES, reps=1,
+                   grad_modes=GRAD_MODES + ("pallas",))
+        assert rows and all(v > 0 for r in rows for k, v in r.items()
+                            if k.endswith("_us")), "bench produced no timings"
+    else:
+        run()
+
+
 if __name__ == "__main__":
-    run()
+    main()

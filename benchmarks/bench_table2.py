@@ -17,7 +17,7 @@ import numpy as np
 sys.path.insert(0, "src")
 
 from repro.configs import paper_cnn                         # noqa: E402
-from repro.core import bpim2col, im2col_ref, phase_decomp   # noqa: E402
+from repro.core import im2col_ref, phase_decomp     # noqa: E402
 from benchmarks import perfmodel                            # noqa: E402
 
 # Paper Table II: (loss_bp, loss_trad_comp, loss_trad_reorg, grad_bp,

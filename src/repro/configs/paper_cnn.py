@@ -9,8 +9,6 @@ Batch size 2 and FP32, matching Section IV's setup.
 
 from __future__ import annotations
 
-import dataclasses
-
 from repro.core.im2col_ref import ConvDims
 
 BATCH = 2  # paper Section IV

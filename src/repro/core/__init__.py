@@ -1,7 +1,8 @@
 """Core: the paper's contribution — BP-im2col implicit backprop lowering."""
 
 from repro.core.im2col_ref import ConvDims
-from repro.core.conv import conv2d, conv1d, depthwise_causal_conv1d, make_dims
+from repro.core.conv import (MODES, conv1d, conv1d_causal, conv2d,
+                             depthwise_causal_conv1d, make_dims)
 
-__all__ = ["ConvDims", "conv2d", "conv1d", "depthwise_causal_conv1d",
-           "make_dims"]
+__all__ = ["ConvDims", "MODES", "conv2d", "conv1d", "conv1d_causal",
+           "depthwise_causal_conv1d", "make_dims"]

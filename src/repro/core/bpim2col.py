@@ -31,6 +31,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.im2col_ref import ConvDims, rot180
 
@@ -180,7 +181,8 @@ def weight_grad_implicit(x: jax.Array, dy: jax.Array, d: ConvDims) -> jax.Array:
     (same as inference -- no zero-space beyond ordinary padding)."""
     from repro.core.im2col_ref import im2col, zero_pad
     a = gather_lowered_A_grad(dy, d)                  # (N, B*Ho''*Wo'')
-    xe = zero_pad(x, d.P_h, d.P_w).transpose(1, 0, 2, 3)
+    xe = zero_pad(x, d.P_h, d.P_w,
+                  d.p_h_hi, d.p_w_hi).transpose(1, 0, 2, 3)
     xe = xe[:, :, :d.K_h + (d.H_o - 1) * d.S, :d.K_w + (d.W_o - 1) * d.S]
     b = im2col(xe, d.H_o2, d.W_o2, 1)                 # (C*Kh*Kw, B*Ho''*Wo'')
     dwt = b @ a.T                                     # (C*Kh*Kw, N)
@@ -198,7 +200,6 @@ def lowered_sparsity_loss(d: ConvDims) -> float:
     rows, cols = d.lowered_B_shape_loss()
     # Count analytically: entry is nonzero iff its virtual (h, w) passes NZ.
     # h = oh + h_k with oh in [0, H_i), h_k in [0, K_h); same for w.
-    import numpy as np
     hs = np.arange(d.H_i)[:, None] + np.arange(d.K_h)[None, :]  # (H_i, K_h)
     ws = np.arange(d.W_i)[:, None] + np.arange(d.K_w)[None, :]
     hh = hs - (d.K_h - 1 - d.P_h)

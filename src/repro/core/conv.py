@@ -13,18 +13,32 @@ for every mode; the mode chooses how the backward pass is realized:
   * ``"pallas"``      -- Pallas kernels (phase-decomposed GEMMs with explicit
                          VMEM BlockSpecs; interpret=True on CPU)
 
-The mode is a static argument so jit specializes per mode; all modes are
-validated against each other in tests/test_conv_modes.py.
+``conv2d`` carries a ``jax.custom_vjp``: the forward runs the selected
+engine and the backward dispatches the input gradient (transposed mode,
+Algorithm 1 / phase decomposition) and the weight gradient (dilated mode,
+Algorithm 2) through the same ``ENGINES`` registry, so ``jax.grad``, ``jit``
+and ``vmap`` over any model transparently exercise the paper's datapath.
+All static knobs (stride/padding/mode/groups) are nondiff arguments so jit
+specializes per configuration; every mode is validated against ``jax.grad``
+of the lax reference in tests/test_conv_modes.py.
 
-Also provides ``conv1d_*`` wrappers (used by the Mamba2 / RecurrentGemma
-temporal convolutions) which lower 1-D convs onto the same engines by
-treating them as (H=1) 2-D convs, and a depthwise path.
+Supported scenarios beyond the paper's square case:
+
+  * asymmetric padding: ``padding=((top, bottom), (left, right))`` -- causal
+    temporal convs are expressed as left-only pads;
+  * grouped and depthwise conv via ``groups=`` (weights ``(N, C/g, Kh, Kw)``),
+    lowered as a vmap of the selected engine over the group dim so the
+    BP-im2col datapath is exercised per group;
+  * ``conv1d`` / ``conv1d_causal`` / ``depthwise_causal_conv1d`` wrappers
+    (used by the Mamba2 / RecurrentGemma temporal convolutions) which lower
+    1-D convs onto the same engines as (H=1) 2-D convs.
 """
 
 from __future__ import annotations
 
+import dataclasses
 from functools import partial
-from typing import Literal
+from typing import Callable, Literal
 
 import jax
 import jax.numpy as jnp
@@ -35,82 +49,194 @@ from repro.core.im2col_ref import ConvDims
 Mode = Literal["lax", "traditional", "bp_im2col", "bp_phase", "pallas"]
 
 
-def make_dims(x_shape, w_shape, stride: int, padding: tuple[int, int]) -> ConvDims:
+def _norm_padding(padding) -> tuple[tuple[int, int], tuple[int, int]]:
+    """int | (ph, pw) | ((ph_lo, ph_hi), (pw_lo, pw_hi)) -> nested tuples."""
+    if isinstance(padding, int):
+        return (padding, padding), (padding, padding)
+    ph, pw = padding
+    if isinstance(ph, int):
+        ph = (ph, ph)
+    if isinstance(pw, int):
+        pw = (pw, pw)
+    return (int(ph[0]), int(ph[1])), (int(pw[0]), int(pw[1]))
+
+
+def make_dims(x_shape, w_shape, stride: int, padding,
+              groups: int = 1) -> ConvDims:
+    """Per-group ConvDims: C and N are the per-group channel counts."""
     b, c, h, w = x_shape
-    n, c2, kh, kw = w_shape
-    assert c == c2, f"channel mismatch {c} vs {c2}"
-    return ConvDims(B=b, C=c, H_i=h, W_i=w, N=n, K_h=kh, K_w=kw,
-                    S=stride, P_h=padding[0], P_w=padding[1])
+    n, cg, kh, kw = w_shape
+    assert c == cg * groups, (
+        f"channel mismatch: input C={c}, weight C/g={cg}, groups={groups}")
+    assert n % groups == 0, f"N={n} not divisible by groups={groups}"
+    (ph_lo, ph_hi), (pw_lo, pw_hi) = _norm_padding(padding)
+    return ConvDims(B=b, C=cg, H_i=h, W_i=w, N=n // groups, K_h=kh, K_w=kw,
+                    S=stride, P_h=ph_lo, P_w=pw_lo,
+                    P_h_hi=ph_hi, P_w_hi=pw_hi)
 
 
 # ---------------------------------------------------------------------------
-# Mode dispatch tables
+# Mode registry: forward / input-grad / weight-grad per engine
 # ---------------------------------------------------------------------------
 
-def _forward(x, w, d: ConvDims, mode: Mode):
-    if mode in ("lax", "bp_phase"):
-        return im2col_ref.conv2d_lax(x, w, d)
-    if mode == "pallas":
-        from repro.kernels import ops
-        return ops.conv2d_forward(x, w, d)
-    return im2col_ref.conv2d_forward_explicit(x, w, d)
+@dataclasses.dataclass(frozen=True)
+class Engine:
+    """The three lowered GEMMs of one conv layer under one engine."""
+    forward: Callable      # (x, w, d) -> y
+    input_grad: Callable   # (dy, w, d) -> dx   (transposed mode, Algorithm 1)
+    weight_grad: Callable  # (x, dy, d) -> dw   (dilated mode, Algorithm 2)
 
 
-def _input_grad(dy, w, d: ConvDims, mode: Mode):
+def _pallas_forward(x, w, d):
+    from repro.kernels import ops
+    return ops.conv2d_forward(x, w, d)
+
+
+def _pallas_input_grad(dy, w, d):
+    from repro.kernels import ops
+    return ops.conv2d_input_grad(dy, w, d)
+
+
+def _pallas_weight_grad(x, dy, d):
+    from repro.kernels import ops
+    return ops.conv2d_weight_grad(x, dy, d)
+
+
+def _lax_input_grad(dy, w, d):
+    # Anchor: autodiff of the native conv (never dispatched through the
+    # implicit path; used by mode="lax" and as the registry's control).
+    x_shape = (d.B, d.C, d.H_i, d.W_i)
+    _, vjp = jax.vjp(
+        lambda x_: im2col_ref.conv2d_lax(x_, w, d),
+        jnp.zeros(x_shape, dy.dtype))
+    return vjp(dy)[0]
+
+
+def _lax_weight_grad(x, dy, d):
+    w_shape = (d.N, d.C, d.K_h, d.K_w)
+    _, vjp = jax.vjp(
+        lambda w_: im2col_ref.conv2d_lax(x, w_, d),
+        jnp.zeros(w_shape, dy.dtype))
+    return vjp(dy)[0]
+
+
+ENGINES: dict[str, Engine] = {
+    "lax": Engine(im2col_ref.conv2d_lax, _lax_input_grad, _lax_weight_grad),
+    "traditional": Engine(im2col_ref.conv2d_forward_explicit,
+                          im2col_ref.input_grad_explicit,
+                          im2col_ref.weight_grad_explicit),
+    "bp_im2col": Engine(im2col_ref.conv2d_forward_explicit,
+                        bpim2col.input_grad_implicit,
+                        bpim2col.weight_grad_implicit),
+    "bp_phase": Engine(im2col_ref.conv2d_lax,
+                       phase_decomp.input_grad_phase,
+                       phase_decomp.weight_grad_phase),
+    "pallas": Engine(_pallas_forward, _pallas_input_grad,
+                     _pallas_weight_grad),
+}
+
+MODES: tuple[str, ...] = tuple(ENGINES)
+
+
+def _engine(mode: Mode) -> Engine:
+    try:
+        return ENGINES[mode]
+    except KeyError:
+        raise ValueError(f"unknown conv mode {mode!r}; "
+                         f"choose from {MODES}") from None
+
+
+# ---------------------------------------------------------------------------
+# Grouped dispatch: vmap the per-group engine over the group dim
+# ---------------------------------------------------------------------------
+
+def _split_groups(x, w, groups: int):
+    """x (B,C,H,W), w (N,C/g,Kh,Kw) -> xg (g,B,C/g,H,W), wg (g,N/g,...)."""
+    b, c, h, wd = x.shape
+    n = w.shape[0]
+    xg = x.reshape(b, groups, c // groups, h, wd).transpose(1, 0, 2, 3, 4)
+    wg = w.reshape(groups, n // groups, *w.shape[1:])
+    return xg, wg
+
+
+def _merge_groups(yg):
+    """(g, B, N/g, H, W) -> (B, g*N/g, H, W)."""
+    g, b, ng, h, w = yg.shape
+    return yg.transpose(1, 0, 2, 3, 4).reshape(b, g * ng, h, w)
+
+
+def _forward(x, w, d: ConvDims, mode: Mode, groups: int):
+    if groups == 1:
+        return _engine(mode).forward(x, w, d)
     if mode == "lax":
-        raise AssertionError("lax mode uses native autodiff")
-    if mode == "traditional":
-        return im2col_ref.input_grad_explicit(dy, w, d)
-    if mode == "bp_im2col":
-        return bpim2col.input_grad_implicit(dy, w, d)
-    if mode == "bp_phase":
-        return phase_decomp.input_grad_phase(dy, w, d)
-    if mode == "pallas":
-        from repro.kernels import ops
-        return ops.conv2d_input_grad(dy, w, d)
-    raise ValueError(mode)
+        return jax.lax.conv_general_dilated(
+            x, w, (d.S, d.S),
+            [(d.P_h, d.p_h_hi), (d.P_w, d.p_w_hi)],
+            dimension_numbers=("NCHW", "OIHW", "NCHW"),
+            feature_group_count=groups)
+    xg, wg = _split_groups(x, w, groups)
+    yg = jax.vmap(lambda xx, ww: _engine(mode).forward(xx, ww, d))(xg, wg)
+    return _merge_groups(yg)
 
 
-def _weight_grad(x, dy, d: ConvDims, mode: Mode):
-    if mode == "traditional":
-        return im2col_ref.weight_grad_explicit(x, dy, d)
-    if mode == "bp_im2col":
-        return bpim2col.weight_grad_implicit(x, dy, d)
-    if mode == "bp_phase":
-        return phase_decomp.weight_grad_phase(x, dy, d)
-    if mode == "pallas":
-        from repro.kernels import ops
-        return ops.conv2d_weight_grad(x, dy, d)
-    raise ValueError(mode)
+def _input_grad(dy, w, d: ConvDims, mode: Mode, groups: int):
+    if groups == 1:
+        return _engine(mode).input_grad(dy, w, d)
+    b = dy.shape[0]
+    dyg = dy.reshape(b, groups, d.N, d.H_o, d.W_o).transpose(1, 0, 2, 3, 4)
+    wg = w.reshape(groups, d.N, *w.shape[1:])
+    dxg = jax.vmap(lambda dd, ww: _engine(mode).input_grad(dd, ww, d))(dyg, wg)
+    return _merge_groups(dxg)
+
+
+def _weight_grad(x, dy, d: ConvDims, mode: Mode, groups: int):
+    if groups == 1:
+        return _engine(mode).weight_grad(x, dy, d)
+    b, c = x.shape[0], x.shape[1]
+    xg = x.reshape(b, groups, c // groups, d.H_i, d.W_i).transpose(
+        1, 0, 2, 3, 4)
+    dyg = dy.reshape(b, groups, d.N, d.H_o, d.W_o).transpose(1, 0, 2, 3, 4)
+    dwg = jax.vmap(lambda xx, dd: _engine(mode).weight_grad(xx, dd, d))(
+        xg, dyg)                                   # (g, N/g, C/g, Kh, Kw)
+    return dwg.reshape(groups * d.N, d.C, d.K_h, d.K_w)
 
 
 # ---------------------------------------------------------------------------
 # custom_vjp conv
 # ---------------------------------------------------------------------------
 
-@partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+@partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5))
 def conv2d(x: jax.Array, w: jax.Array, stride: int = 1,
-           padding: tuple[int, int] = (0, 0), mode: Mode = "bp_phase"):
-    """NCHW x OIHW -> NCHW convolution with a selectable backprop engine."""
-    d = make_dims(x.shape, w.shape, stride, padding)
-    if mode == "lax":
-        return im2col_ref.conv2d_lax(x, w, d)
-    return _forward(x, w, d, mode)
+           padding=(0, 0), mode: Mode = "bp_phase",
+           groups: int = 1) -> jax.Array:
+    """NCHW x OIHW -> NCHW convolution with a selectable backprop engine.
+
+    padding: int, (pad_h, pad_w), or ((top, bottom), (left, right)).
+    groups:  feature groups; ``groups == C`` is depthwise.
+    """
+    d = _checked_dims(x.shape, w.shape, stride, padding, mode, groups)
+    return _forward(x, w, d, mode, groups)
 
 
-def _conv2d_fwd(x, w, stride, padding, mode):
-    d = make_dims(x.shape, w.shape, stride, padding)
-    return _forward(x, w, d, mode), (x, w)
+def _checked_dims(x_shape, w_shape, stride, padding, mode, groups):
+    d = make_dims(x_shape, w_shape, stride, padding, groups)
+    if mode != "lax":
+        # The implicit engines assume the paper's geometry (P <= K-1 etc.);
+        # fail at trace time with a clear message, not inside a deep pad op.
+        d.validate()
+    return d
 
 
-def _conv2d_bwd(stride, padding, mode, res, dy):
+def _conv2d_fwd(x, w, stride, padding, mode, groups):
+    d = _checked_dims(x.shape, w.shape, stride, padding, mode, groups)
+    return _forward(x, w, d, mode, groups), (x, w)
+
+
+def _conv2d_bwd(stride, padding, mode, groups, res, dy):
     x, w = res
-    d = make_dims(x.shape, w.shape, stride, padding)
-    if mode == "lax":
-        dx, dw = im2col_ref.conv_grads_lax(x, w, dy, d)
-    else:
-        dx = _input_grad(dy, w, d, mode)
-        dw = _weight_grad(x, dy, d, mode)
+    d = make_dims(x.shape, w.shape, stride, padding, groups)
+    dx = _input_grad(dy, w, d, mode, groups)
+    dw = _weight_grad(x, dy, d, mode, groups)
     return dx.astype(x.dtype), dw.astype(w.dtype)
 
 
@@ -121,30 +247,42 @@ conv2d.defvjp(_conv2d_fwd, _conv2d_bwd)
 # 1-D and depthwise wrappers (Mamba2 / RecurrentGemma temporal convs)
 # ---------------------------------------------------------------------------
 
-def conv1d(x: jax.Array, w: jax.Array, stride: int = 1, padding: int = 0,
-           mode: Mode = "bp_phase") -> jax.Array:
-    """(B, C, L) x (N, C, K) -> (B, N, L_o) through the 2-D engines."""
+def conv1d(x: jax.Array, w: jax.Array, stride: int = 1, padding=0,
+           mode: Mode = "bp_phase", groups: int = 1) -> jax.Array:
+    """(B, C, L) x (N, C/g, K) -> (B, N, L_o) through the 2-D engines.
+
+    padding: int (symmetric) or (lo, hi) along the temporal dim.
+    """
+    if isinstance(padding, int):
+        padding = (padding, padding)
     x4 = x[:, :, None, :]
     w4 = w[:, :, None, :]
-    y = conv2d(x4, w4, stride, (0, padding), mode)
+    y = conv2d(x4, w4, stride, ((0, 0), tuple(padding)), mode, groups)
     return y[:, :, 0, :]
+
+
+def conv1d_causal(x: jax.Array, w: jax.Array, mode: Mode = "bp_phase",
+                  groups: int = 1) -> jax.Array:
+    """Causal (left-pad K-1) stride-1 conv1d: (B, C, L) -> (B, N, L)."""
+    k = w.shape[-1]
+    return conv1d(x, w, 1, (k - 1, 0), mode, groups)
 
 
 def depthwise_causal_conv1d(x: jax.Array, w: jax.Array,
                             mode: Mode = "bp_phase") -> jax.Array:
     """Causal depthwise conv used by Mamba2: x (B, L, C), w (K, C).
 
-    Implemented channel-grouped: pad left K-1, each channel convolved with its
-    own K-tap filter.  Grouped conv is lowered as feature-dim gather + the
-    selected engine on a (B*C, 1, 1, L) view to keep the BP-im2col path
-    exercised for the depthwise case too; for speed under jit the lax path
-    short-circuits to conv_general_dilated with feature_group_count.
+    Lowered as a grouped (groups == C) causal conv1d: the causal shift is an
+    asymmetric left-only pad and each channel convolves with its own K-tap
+    filter, so the BP-im2col datapath is exercised for the depthwise case
+    too.  The lax and bp_phase paths short-circuit to one fused
+    conv_general_dilated with feature_group_count: a stride-1 backward has
+    no zero-insertion, so the phase decomposition degenerates to exactly
+    the native conv (same math, one XLA op on the production hot path).
     """
     b, l, c = x.shape
     k = w.shape[0]
-    if mode == "lax" or mode == "bp_phase":
-        # Production path: grouped conv, causal left pad; backward of a
-        # stride-1 conv has no zero-insertion so phase == lax here.
+    if mode in ("lax", "bp_phase"):
         xt = x.transpose(0, 2, 1)[:, :, None, :]            # (B, C, 1, L)
         wt = w.T[:, None, None, :]                          # (C, 1, 1, K)
         y = jax.lax.conv_general_dilated(
@@ -152,17 +290,10 @@ def depthwise_causal_conv1d(x: jax.Array, w: jax.Array,
             dimension_numbers=("NCHW", "OIHW", "NCHW"),
             feature_group_count=c)
         return y[:, :, 0, :].transpose(0, 2, 1)
-    # Engine-exercising path: fold channels into batch (depthwise == C
-    # independent single-channel convs).
-    xt = x.transpose(0, 2, 1).reshape(b * c, 1, 1, l)
-    xt = jnp.pad(xt, ((0, 0), (0, 0), (0, 0), (k - 1, 0)))
-    wt = w.T.reshape(c, 1, 1, k)
-    # vmap the engine over channels: each channel uses its own 1-tap filter.
-    xg = xt.reshape(b, c, 1, 1, l + k - 1).transpose(1, 0, 2, 3, 4)
-    def one(ch_x, ch_w):
-        return conv2d(ch_x, ch_w[None], 1, (0, 0), mode)
-    y = jax.vmap(one)(xg, wt)                               # (C, B, 1, 1, L)
-    return y[:, :, 0, 0, :].transpose(1, 2, 0)
+    xt = x.transpose(0, 2, 1)                           # (B, C, L)
+    wt = w.T[:, None, :]                                # (C, 1, K)
+    y = conv1d_causal(xt, wt, mode=mode, groups=c)      # (B, C, L)
+    return y.transpose(0, 2, 1)
 
 
 def output_shape(d: ConvDims) -> tuple[int, int, int, int]:

@@ -26,16 +26,21 @@ Gradient calculation (dilated conv, Eq. (1) bottom):
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 
 @dataclasses.dataclass(frozen=True)
 class ConvDims:
-    """Static geometry of one convolutional layer (paper Table I symbols)."""
+    """Static geometry of one convolutional layer (paper Table I symbols).
+
+    ``P_h``/``P_w`` are the LOW-side (top/left) pads.  The high-side (bottom/
+    right) pads default to the same value; set ``P_h_hi``/``P_w_hi`` for
+    asymmetric padding (e.g. causal temporal convs pad only the left side).
+    All the implicit address mappings depend only on the low-side pad; the
+    high side enters through ``H_o``/``W_o`` and the remainders.
+    """
 
     B: int       # batch
     C: int       # input channels
@@ -47,14 +52,24 @@ class ConvDims:
     S: int = 1   # stride (same both dims, as in the paper)
     P_h: int = 0
     P_w: int = 0
+    P_h_hi: int = -1   # -1: symmetric (same as P_h)
+    P_w_hi: int = -1   # -1: symmetric (same as P_w)
+
+    @property
+    def p_h_hi(self) -> int:
+        return self.P_h if self.P_h_hi < 0 else self.P_h_hi
+
+    @property
+    def p_w_hi(self) -> int:
+        return self.P_w if self.P_w_hi < 0 else self.P_w_hi
 
     @property
     def H_o(self) -> int:
-        return (self.H_i + 2 * self.P_h - self.K_h) // self.S + 1
+        return (self.H_i + self.P_h + self.p_h_hi - self.K_h) // self.S + 1
 
     @property
     def W_o(self) -> int:
-        return (self.W_i + 2 * self.P_w - self.K_w) // self.S + 1
+        return (self.W_i + self.P_w + self.p_w_hi - self.K_w) // self.S + 1
 
     # Zero-inserted sizes (Table I): H_o'' / W_o''
     @property
@@ -69,27 +84,35 @@ class ConvDims:
     # (+R: general-tiling correction, zero under the paper's assumptions)
     @property
     def H_o3(self) -> int:
-        return self.H_o2 + 2 * (self.K_h - 1 - self.P_h) + self.R_h
+        return (self.H_o2 + (self.K_h - 1 - self.P_h)
+                + (self.K_h - 1 - self.p_h_hi) + self.R_h)
 
     @property
     def W_o3(self) -> int:
-        return self.W_o2 + 2 * (self.K_w - 1 - self.P_w) + self.R_w
+        return (self.W_o2 + (self.K_w - 1 - self.P_w)
+                + (self.K_w - 1 - self.p_w_hi) + self.R_w)
 
     # Tiling remainder: rows/cols of the input that no forward window covers
     # (the paper's formulas assume R == 0, but its own Table II layer 1,
     # 224/3/64/3/2/0, has R == 1 -- we support the general case).
     @property
     def R_h(self) -> int:
-        return self.H_i + 2 * self.P_h - self.K_h - (self.H_o - 1) * self.S
+        return (self.H_i + self.P_h + self.p_h_hi - self.K_h
+                - (self.H_o - 1) * self.S)
 
     @property
     def R_w(self) -> int:
-        return self.W_i + 2 * self.P_w - self.K_w - (self.W_o - 1) * self.S
+        return (self.W_i + self.P_w + self.p_w_hi - self.K_w
+                - (self.W_o - 1) * self.S)
 
     def validate(self) -> None:
         assert self.H_o >= 1 and self.W_o >= 1
         assert self.K_h - 1 - self.P_h >= 0 and self.K_w - 1 - self.P_w >= 0, (
             "transposed-conv padding K-1-P must be non-negative")
+        assert self.K_h - 1 - self.p_h_hi + self.R_h >= 0 and \
+            self.K_w - 1 - self.p_w_hi + self.R_w >= 0, (
+            "high-side transposed-conv padding K-1-P_hi+R must be "
+            "non-negative")
 
     # ---- element counts used by the perf model and sparsity analysis ----
 
@@ -143,13 +166,14 @@ def zero_pad(x: jax.Array, ph: int, pw: int, ph_hi: int | None = None,
 def zero_insert_pad(dy: jax.Array, d: ConvDims) -> jax.Array:
     """dY (B,N,H_o,W_o) -> zero-spaced dY_ei.
 
-    Pad is K-1-P on top/left and K-1-P+R on bottom/right so that a stride-1
-    valid conv reproduces the full H_i x W_i input gradient (R is the forward
-    tiling remainder, zero in the paper's idealized formulas).
+    Pad is K-1-P on top/left and K-1-P_hi+R on bottom/right so that a
+    stride-1 valid conv reproduces the full H_i x W_i input gradient (R is
+    the forward tiling remainder, zero in the paper's idealized formulas).
     """
     return zero_pad(zero_insert(dy, d.S),
                     d.K_h - 1 - d.P_h, d.K_w - 1 - d.P_w,
-                    d.K_h - 1 - d.P_h + d.R_h, d.K_w - 1 - d.P_w + d.R_w)
+                    d.K_h - 1 - d.p_h_hi + d.R_h,
+                    d.K_w - 1 - d.p_w_hi + d.R_w)
 
 
 def rot180(w: jax.Array) -> jax.Array:
@@ -184,7 +208,7 @@ def im2col(x: jax.Array, kh: int, kw: int, stride: int = 1) -> jax.Array:
 
 def conv2d_forward_explicit(x: jax.Array, w: jax.Array, d: ConvDims) -> jax.Array:
     """Inference: Y = im2col(pad(I)) @ W  -- traditional im2col."""
-    xp = zero_pad(x, d.P_h, d.P_w)
+    xp = zero_pad(x, d.P_h, d.P_w, d.p_h_hi, d.p_w_hi)
     a = im2col(xp, d.K_h, d.K_w, d.S)                       # (B*Ho*Wo, C*Kh*Kw)
     b = w.reshape(d.N, d.C * d.K_h * d.K_w).T               # (C*Kh*Kw, N)
     y = a @ b                                               # (B*Ho*Wo, N)
@@ -213,7 +237,7 @@ def weight_grad_explicit(x: jax.Array, dy: jax.Array, d: ConvDims) -> jax.Array:
     transposes turn B into the contraction dim and the zero-inserted dY into the
     convolving kernel of size (H_o'', W_o'').
     """
-    xe = zero_pad(x, d.P_h, d.P_w).transpose(1, 0, 2, 3)    # (C,B,Hp,Wp)
+    xe = zero_pad(x, d.P_h, d.P_w, d.p_h_hi, d.p_w_hi).transpose(1, 0, 2, 3)
     # Crop tiling-remainder rows/cols (never touched by any forward window).
     xe = xe[:, :, :d.K_h + (d.H_o - 1) * d.S, :d.K_w + (d.W_o - 1) * d.S]
     dyi = zero_insert(dy, d.S).transpose(1, 0, 2, 3)        # (N,B,Ho'',Wo'')
@@ -229,7 +253,7 @@ def weight_grad_explicit(x: jax.Array, dy: jax.Array, d: ConvDims) -> jax.Array:
 
 def conv2d_lax(x: jax.Array, w: jax.Array, d: ConvDims) -> jax.Array:
     return jax.lax.conv_general_dilated(
-        x, w, (d.S, d.S), [(d.P_h, d.P_h), (d.P_w, d.P_w)],
+        x, w, (d.S, d.S), [(d.P_h, d.p_h_hi), (d.P_w, d.p_w_hi)],
         dimension_numbers=("NCHW", "OIHW", "NCHW"))
 
 

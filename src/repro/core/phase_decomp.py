@@ -89,12 +89,13 @@ def input_grad_phase(dy: jax.Array, w: jax.Array, d: ConvDims) -> jax.Array:
 
 
 def _phase_conv(dy: jax.Array, wf: jax.Array, d: ConvDims, r_h: int, r_w: int):
-    """S == 1 path: ordinary full correlation with pad K-1-P."""
+    """S == 1 path: ordinary full correlation with pad K-1-P (low side) and
+    K-1-P_hi+R (high side, exact for asymmetric padding)."""
     return jax.lax.conv_general_dilated(
         dy, wf,
         window_strides=(1, 1),
-        padding=[(d.K_h - 1 - d.P_h, d.K_h - 1 - d.P_h),
-                 (d.K_w - 1 - d.P_w, d.K_w - 1 - d.P_w)],
+        padding=[(d.K_h - 1 - d.P_h, d.K_h - 1 - d.p_h_hi + d.R_h),
+                 (d.K_w - 1 - d.P_w, d.K_w - 1 - d.p_w_hi + d.R_w)],
         dimension_numbers=("NCHW", "IOHW", "NCHW"))
 
 
@@ -108,7 +109,7 @@ def weight_grad_phase(x: jax.Array, dy: jax.Array, d: ConvDims) -> jax.Array:
     The zero-inserted 'kernel' dY_i of the paper's dilated mode never exists:
     its zero rows/cols correspond to input samples that are simply never read.
     """
-    xp = zero_pad(x, d.P_h, d.P_w)                    # (B, C, Hp, Wp)
+    xp = zero_pad(x, d.P_h, d.P_w, d.p_h_hi, d.p_w_hi)  # (B, C, Hp, Wp)
     taps = []
     for kh in range(d.K_h):
         row = []

@@ -1,0 +1,6 @@
+"""Distributed substrate: sharding rules and activation constraints."""
+
+from repro.dist import sharding
+from repro.dist.constraints import constrain_batch, set_activation_policy
+
+__all__ = ["sharding", "constrain_batch", "set_activation_policy"]

@@ -1,0 +1,48 @@
+"""Activation sharding constraints.
+
+``constrain_batch`` pins the leading (batch) dim of an activation to the mesh
+axes chosen by ``set_activation_policy``.  It is a no-op outside a mesh
+context, so the same model code runs unsharded on one device and sharded
+under ``with mesh:`` without branching at the call sites.
+"""
+
+from __future__ import annotations
+
+import jax
+
+_ACT_AXES: tuple[str, ...] | None = None
+
+
+def set_activation_policy(axes) -> None:
+    """axes: mesh axis names the batch dim is sharded over (or None/())."""
+    global _ACT_AXES
+    _ACT_AXES = tuple(axes) if axes else None
+
+
+def _active_mesh():
+    """The mesh from an enclosing ``with mesh:`` block, if any."""
+    try:
+        from jax._src.mesh import thread_resources
+        m = thread_resources.env.physical_mesh
+        return None if m.empty else m
+    except Exception:  # pragma: no cover - private-API drift safety net
+        return None
+
+
+def constrain_batch(x: jax.Array) -> jax.Array:
+    axes = _ACT_AXES
+    mesh = _active_mesh()
+    if not axes or mesh is None or x.ndim == 0:
+        return x
+    axes = tuple(a for a in axes if a in mesh.shape)
+    if not axes:
+        return x
+    total = 1
+    for a in axes:
+        total *= mesh.shape[a]
+    if x.shape[0] % total != 0:
+        return x
+    spec = jax.sharding.PartitionSpec(
+        axes if len(axes) > 1 else axes[0], *([None] * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(mesh, spec))

@@ -1,0 +1,148 @@
+"""Path-based sharding rules for params, optimizer state, batches and caches.
+
+All rules operate on pytrees of arrays or ``ShapeDtypeStruct``s and return
+trees of ``PartitionSpec`` with the same structure; ``to_shardings`` converts
+a spec tree to ``NamedSharding``s for a concrete mesh.  Rules only need axis
+*sizes*, so the ``mesh`` argument may be any object with a ``.shape`` mapping
+(tests use a stub).
+
+Policies:
+  * ``tp``      -- 2-D data x tensor parallelism (default): linear weights
+                   shard (d_in="data", d_out="model"); ``wo`` swaps the axes
+                   so the attention output projection all-reduces once; the
+                   embedding shards vocab over "model"; MoE expert tensors
+                   shard experts over "model" (expert parallelism) and d_in
+                   over "data".  Batch shards over ("data",).
+  * ``dp_only`` -- pure (Zero-style) data parallelism: the "model" axis is
+                   dropped from param specs and joins the batch axes instead.
+  * ``tp_rep``  -- tensor-parallel activations with fully replicated params
+                   (perf-experiment baseline).
+
+Every assignment is divisibility-checked against the mesh axis size; an
+indivisible dim falls back to replication for that dim only.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def _axis(mesh, name: str) -> int:
+    return dict(mesh.shape).get(name, 1)
+
+
+def _fit(dim: int, mesh, axis) -> object:
+    """axis if dim divides the mesh axis size, else None (replicate)."""
+    if axis is None:
+        return None
+    if isinstance(axis, tuple):
+        total = 1
+        for a in axis:
+            total *= _axis(mesh, a)
+    else:
+        total = _axis(mesh, axis)
+    return axis if total > 0 and dim % total == 0 else None
+
+
+def batch_axes(mesh, policy: str = "tp") -> tuple[str, ...]:
+    """Mesh axes carrying the batch dim under a policy."""
+    names = tuple(dict(mesh.shape))
+    if policy == "dp_only":
+        cand = ("pod", "data", "model")
+    else:  # tp / tp_rep: model axis is reserved for tensor parallelism
+        cand = ("pod", "data")
+    return tuple(a for a in cand if a in names)
+
+
+# ---------------------------------------------------------------------------
+# Parameter rules
+# ---------------------------------------------------------------------------
+
+def _leaf_spec(path: tuple[str, ...], leaf, mesh, policy: str) -> P:
+    ndim = len(leaf.shape)
+    if policy == "tp_rep" or ndim < 2:
+        return P()
+    lead = [None] * (ndim - 2)
+    if "embed" in path:
+        d_in, d_out = "model", "data"        # vocab over model, d over data
+    elif "moe" in path and "shared" not in path and "router" not in path \
+            and ndim >= 3 and path[-1] == "w":
+        # Expert tensor (..., E, d_in, d_out): expert parallelism over
+        # "model", d_in over "data".
+        lead = [None] * (ndim - 3)
+        spec = [_fit(leaf.shape[-3], mesh, "model"),
+                _fit(leaf.shape[-2], mesh, "data"), None]
+        if policy == "dp_only":
+            spec = [s if s != "model" else None for s in spec]
+        return P(*lead, *spec)
+    elif "wo" in path:
+        d_in, d_out = "model", "data"        # output proj: swapped axes
+    else:
+        d_in, d_out = "data", "model"
+    spec = [_fit(leaf.shape[-2], mesh, d_in),
+            _fit(leaf.shape[-1], mesh, d_out)]
+    if policy == "dp_only":
+        spec = [s if s != "model" else None for s in spec]
+    return P(*lead, *spec)
+
+
+def param_specs(params, mesh, policy: str = "tp"):
+    """PartitionSpec tree mirroring a parameter tree."""
+    def walk(tree, path):
+        if isinstance(tree, dict):
+            return {k: walk(v, path + (k,)) for k, v in tree.items()}
+        return _leaf_spec(path, tree, mesh, policy)
+    return walk(params, ())
+
+
+def opt_state_specs(params, mesh, policy: str = "tp"):
+    """Specs for ``adamw.init_state(params)``: m/v inherit the param specs."""
+    ps = param_specs(params, mesh, policy)
+    return {"m": ps, "v": ps, "step": P()}
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache rules
+# ---------------------------------------------------------------------------
+
+def _dim_spec(axes: tuple[str, ...], dim: int, mesh):
+    axis = axes if len(axes) > 1 else (axes[0] if axes else None)
+    return _fit(dim, mesh, axis)
+
+
+def batch_specs(batch, mesh, policy: str = "tp"):
+    """Shard the leading dim of every batch leaf over the batch axes."""
+    axes = batch_axes(mesh, policy)
+
+    def leaf(x):
+        ndim = len(x.shape)
+        if ndim == 0 or not axes:
+            return P()
+        return P(_dim_spec(axes, x.shape[0], mesh), *([None] * (ndim - 1)))
+    return jax.tree.map(leaf, batch)
+
+
+def cache_specs(cache, mesh, policy: str = "tp"):
+    """Decode caches are stacked (L, B, ...): shard the batch dim (dim 1)."""
+    axes = batch_axes(mesh, policy)
+
+    def leaf(x):
+        ndim = len(x.shape)
+        if ndim < 2 or not axes:
+            return P()
+        return P(None, _dim_spec(axes, x.shape[1], mesh),
+                 *([None] * (ndim - 2)))
+    return jax.tree.map(leaf, cache)
+
+
+# ---------------------------------------------------------------------------
+# Spec tree -> shardings
+# ---------------------------------------------------------------------------
+
+def to_shardings(specs, mesh):
+    """PartitionSpec tree (or a single spec) -> NamedSharding tree."""
+    if isinstance(specs, P):
+        return NamedSharding(mesh, specs)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda s: isinstance(s, P))

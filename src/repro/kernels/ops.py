@@ -9,23 +9,31 @@ Responsibilities:
     fallback to the pure-jnp phase decomposition when a shape cannot be
     tiled into VMEM (the fallback is semantically identical).
 
+Tap tables and tile choices depend only on the static ``ConvDims``, so they
+are memoized (``functools.lru_cache``): repeated layer shapes -- every step
+of a training run retraces the same convs -- skip the VMEM budgeting and tap
+enumeration entirely.  ``tile_plan_cache_info()`` exposes hit counts for
+tests and debugging; ``clear_tile_plan_cache()`` resets (e.g. after changing
+``VMEM_BUDGET_BYTES``).
+
 ``interpret`` defaults to True because this container is CPU-only; on real
 TPU hardware set ``repro.kernels.ops.INTERPRET = False``.
 """
 
 from __future__ import annotations
 
-import math
+import dataclasses
+import functools
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.im2col_ref import ConvDims, rot180, zero_pad
 from repro.core import phase_decomp
-from repro.kernels import tap_gemm as tg
 
 INTERPRET = True
 VMEM_BUDGET_BYTES = 14 * 1024 * 1024
+_ELEM_BYTES = 4            # budget in f32 elements (worst case)
 
 
 # ---------------------------------------------------------------------------
@@ -66,8 +74,129 @@ def _phase_split(xp: jax.Array, S: int) -> jax.Array:
     return xp.transpose(2, 4, 0, 1, 3, 5).reshape(S * S, b, hp2 // S, wp2 // S, c)
 
 
-def _vmem_ok(*arrays_bytes: int) -> bool:
-    return sum(arrays_bytes) <= VMEM_BUDGET_BYTES
+# ---------------------------------------------------------------------------
+# Memoized tile-size / tap-table selection (static per ConvDims)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TilePlan:
+    """One Pallas dispatch: channel tiling, tap table, VMEM verdict."""
+    fits: bool
+    cin_pad: int
+    cin_tile: int
+    cout_pad: int
+    cout_tile: int
+    taps: tuple[tuple[int, int, int], ...]
+    bytes_needed: int
+
+
+@dataclasses.dataclass(frozen=True)
+class PhasePlan:
+    """Input-grad dispatch geometry for one output stride phase."""
+    r_h: int
+    r_w: int
+    c_h: int
+    c_w: int
+    m_h: int
+    m_w: int
+    n_qh: int
+    n_qw: int
+    crop_h: int
+    crop_w: int
+    pad_lo_h: int
+    pad_lo_w: int
+    pad_hi_h: int
+    pad_hi_w: int
+    plan: TilePlan
+
+
+def _phase_plane_hw(d: ConvDims) -> tuple[int, int]:
+    """Spatial extent of one phase plane of the padded input."""
+    hp = d.H_i + d.P_h + d.p_h_hi
+    wp = d.W_i + d.P_w + d.p_w_hi
+    return -(-hp // d.S), -(-wp // d.S)
+
+
+def _forward_taps(d: ConvDims) -> tuple[tuple[int, int, int], ...]:
+    """Kernel tap (kh, kw) -> (phase plane, du, dv) over the split input."""
+    return tuple(((kh % d.S) * d.S + (kw % d.S), kh // d.S, kw // d.S)
+                 for kh in range(d.K_h) for kw in range(d.K_w))
+
+
+@functools.lru_cache(maxsize=4096)
+def forward_plan(d: ConvDims) -> TilePlan:
+    cin_p, cin_t = _channel_tile(d.C)
+    cout_p, cout_t = _channel_tile(d.N)
+    taps = _forward_taps(d)
+    hps, wps = _phase_plane_hw(d)
+    bytes_needed = (d.S * d.S * hps * wps * cin_t * _ELEM_BYTES
+                    + len(taps) * cin_t * cout_t * _ELEM_BYTES
+                    + 2 * d.H_o * d.W_o * cout_t * _ELEM_BYTES)
+    return TilePlan(bytes_needed <= VMEM_BUDGET_BYTES, cin_p, cin_t,
+                    cout_p, cout_t, taps, bytes_needed)
+
+
+@functools.lru_cache(maxsize=4096)
+def weight_grad_plan(d: ConvDims) -> TilePlan:
+    cin_p, cin_t = _channel_tile(d.C)
+    cout_p, cout_t = _channel_tile(d.N)
+    taps = _forward_taps(d)
+    hps, wps = _phase_plane_hw(d)
+    bytes_needed = (d.S * d.S * hps * wps * cin_t * _ELEM_BYTES
+                    + d.H_o * d.W_o * cout_t * _ELEM_BYTES
+                    + len(taps) * cin_t * cout_t * _ELEM_BYTES)
+    return TilePlan(bytes_needed <= VMEM_BUDGET_BYTES, cin_p, cin_t,
+                    cout_p, cout_t, taps, bytes_needed)
+
+
+@functools.lru_cache(maxsize=4096)
+def input_grad_plan(d: ConvDims) -> tuple[PhasePlan, ...] | None:
+    """Per-phase dispatch plans, or None if any phase exceeds the VMEM
+    budget (the whole op then falls back to the jnp phase decomposition)."""
+    a_h, a_w = d.K_h - 1 - d.P_h, d.K_w - 1 - d.P_w
+    cin_p, cin_t = _channel_tile(d.N)      # contraction dim = N
+    cout_p, cout_t = _channel_tile(d.C)
+    phases = []
+    for r_h in range(min(d.S, d.H_i)):
+        c_h, m_h, off_h, n_qh = phase_decomp._phase_geometry(
+            r_h, a_h, d.S, d.K_h, d.H_i, d.H_o)
+        for r_w in range(min(d.S, d.W_i)):
+            c_w, m_w, off_w, n_qw = phase_decomp._phase_geometry(
+                r_w, a_w, d.S, d.K_w, d.W_i, d.W_o)
+            if n_qh == 0 or n_qw == 0 or m_h == 0 or m_w == 0:
+                continue
+            crop_h, crop_w = max(0, off_h), max(0, off_w)
+            pad_lo_h, pad_lo_w = max(0, -off_h), max(0, -off_w)
+            pad_hi_h = max(0, (n_qh - 1) + off_h + m_h - d.H_o)
+            pad_hi_w = max(0, (n_qw - 1) + off_w + m_w - d.W_o)
+            rows = d.H_o - crop_h + pad_lo_h + pad_hi_h
+            cols = d.W_o - crop_w + pad_lo_w + pad_hi_w
+            taps = tuple((0, mh, mw)
+                         for mh in range(m_h) for mw in range(m_w))
+            bytes_needed = (rows * cols * cin_t * _ELEM_BYTES
+                            + len(taps) * cin_t * cout_t * _ELEM_BYTES
+                            + 2 * n_qh * n_qw * cout_t * _ELEM_BYTES)
+            plan = TilePlan(bytes_needed <= VMEM_BUDGET_BYTES, cin_p, cin_t,
+                            cout_p, cout_t, taps, bytes_needed)
+            if not plan.fits:
+                return None
+            phases.append(PhasePlan(r_h, r_w, c_h, c_w, m_h, m_w, n_qh, n_qw,
+                                    crop_h, crop_w, pad_lo_h, pad_lo_w,
+                                    pad_hi_h, pad_hi_w, plan))
+    return tuple(phases)
+
+
+_PLANNERS = (forward_plan, weight_grad_plan, input_grad_plan)
+
+
+def tile_plan_cache_info() -> dict[str, object]:
+    """lru_cache stats per planner (hits prove trace-time memoization)."""
+    return {p.__wrapped__.__name__: p.cache_info() for p in _PLANNERS}
+
+
+def clear_tile_plan_cache() -> None:
+    for p in _PLANNERS:
+        p.cache_clear()
 
 
 # ---------------------------------------------------------------------------
@@ -75,27 +204,22 @@ def _vmem_ok(*arrays_bytes: int) -> bool:
 # ---------------------------------------------------------------------------
 
 def conv2d_forward(x: jax.Array, w: jax.Array, d: ConvDims) -> jax.Array:
-    xn = _to_nhwc(x)                                     # (B, H, W, C)
-    xp = zero_pad(xn.transpose(0, 3, 1, 2), d.P_h, d.P_w).transpose(0, 2, 3, 1)
-    src = _phase_split(xp, d.S)                          # (S*S, B, HpS, WpS, C)
-    cin_p, cin_t = _channel_tile(d.C)
-    cout_p, cout_t = _channel_tile(d.N)
-    src = _pad_channels(src, cin_p if cin_p == d.C else 128)
-    # taps: (phase plane, du, dv) per kernel position
-    taps = [((kh % d.S) * d.S + (kw % d.S), kh // d.S, kw // d.S)
-            for kh in range(d.K_h) for kw in range(d.K_w)]
-    wt = w.transpose(2, 3, 1, 0).reshape(d.K_h * d.K_w, d.C, d.N)
-    wt = _pad_channels(wt.transpose(0, 2, 1), cin_p if cin_p == d.C else 128)
-    wt = _pad_channels(wt.transpose(0, 2, 1), cout_p if cout_p == d.N else 128)
-    bytes_needed = (src.shape[0] * src.shape[2] * src.shape[3] * cin_t * 4
-                    + len(taps) * cin_t * cout_t * 4
-                    + 2 * d.H_o * d.W_o * cout_t * 4)
-    if not _vmem_ok(bytes_needed):
+    from repro.kernels import tap_gemm as tg
+    plan = forward_plan(d)
+    if not plan.fits:
         return jax.lax.conv_general_dilated(
-            x, w, (d.S, d.S), [(d.P_h, d.P_h), (d.P_w, d.P_w)],
+            x, w, (d.S, d.S), [(d.P_h, d.p_h_hi), (d.P_w, d.p_w_hi)],
             dimension_numbers=("NCHW", "OIHW", "NCHW"))
-    y = tg.tap_gemm(src, wt, taps, d.H_o, d.W_o,
-                    cin_tile=cin_t, cout_tile=cout_t,
+    xp = zero_pad(x, d.P_h, d.P_w, d.p_h_hi, d.p_w_hi)
+    src = _phase_split(_to_nhwc(xp), d.S)            # (S*S, B, HpS, WpS, C)
+    src = _pad_channels(src, plan.cin_pad if plan.cin_pad == d.C else 128)
+    wt = w.transpose(2, 3, 1, 0).reshape(d.K_h * d.K_w, d.C, d.N)
+    wt = _pad_channels(wt.transpose(0, 2, 1),
+                       plan.cin_pad if plan.cin_pad == d.C else 128)
+    wt = _pad_channels(wt.transpose(0, 2, 1),
+                       plan.cout_pad if plan.cout_pad == d.N else 128)
+    y = tg.tap_gemm(src, wt, plan.taps, d.H_o, d.W_o,
+                    cin_tile=plan.cin_tile, cout_tile=plan.cout_tile,
                     out_dtype=x.dtype, interpret=INTERPRET)
     return _from_nhwc(y[..., :d.N])
 
@@ -105,43 +229,30 @@ def conv2d_forward(x: jax.Array, w: jax.Array, d: ConvDims) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 def conv2d_input_grad(dy: jax.Array, w: jax.Array, d: ConvDims) -> jax.Array:
-    a_h, a_w = d.K_h - 1 - d.P_h, d.K_w - 1 - d.P_w
+    from repro.kernels import tap_gemm as tg
+    phases = input_grad_plan(d)
+    if phases is None:
+        return phase_decomp.input_grad_phase(dy, w, d)
     wf = rot180(w)                                       # (N, C, K_h, K_w)
     dyn = _to_nhwc(dy)                                   # (B, Ho, Wo, N)
-    cin_p, cin_t = _channel_tile(d.N)                    # contraction dim = N
-    cout_p, cout_t = _channel_tile(d.C)
     di = jnp.zeros((d.B, d.H_i, d.W_i, d.C), dtype=dy.dtype)
-    for r_h in range(min(d.S, d.H_i)):
-        c_h, m_h, off_h, n_qh = phase_decomp._phase_geometry(
-            r_h, a_h, d.S, d.K_h, d.H_i, d.H_o)
-        for r_w in range(min(d.S, d.W_i)):
-            c_w, m_w, off_w, n_qw = phase_decomp._phase_geometry(
-                r_w, a_w, d.S, d.K_w, d.W_i, d.W_o)
-            if n_qh == 0 or n_qw == 0 or m_h == 0 or m_w == 0:
-                continue
-            wk = wf[:, :, c_h::d.S, c_w::d.S][:, :, :m_h, :m_w]
-            wk = wk.transpose(2, 3, 0, 1).reshape(m_h * m_w, d.N, d.C)
-            wk = _pad_channels(wk.transpose(0, 2, 1),
-                               cin_p if cin_p == d.N else 128).transpose(0, 2, 1)
-            wk = _pad_channels(wk, cout_p if cout_p == d.C else 128)
-            crop_h, crop_w = max(0, off_h), max(0, off_w)
-            pad_lo_h, pad_lo_w = max(0, -off_h), max(0, -off_w)
-            pad_hi_h = max(0, (n_qh - 1) + off_h + m_h - d.H_o)
-            pad_hi_w = max(0, (n_qw - 1) + off_w + m_w - d.W_o)
-            src = dyn[:, crop_h:, crop_w:, :]
-            src = jnp.pad(src, ((0, 0), (pad_lo_h, pad_hi_h),
-                                (pad_lo_w, pad_hi_w), (0, 0)))
-            src = _pad_channels(src, cin_p if cin_p == d.N else 128)[None]
-            taps = [(0, mh, mw) for mh in range(m_h) for mw in range(m_w)]
-            bytes_needed = (src.shape[2] * src.shape[3] * cin_t * 4
-                            + len(taps) * cin_t * cout_t * 4
-                            + 2 * n_qh * n_qw * cout_t * 4)
-            if not _vmem_ok(bytes_needed):
-                return phase_decomp.input_grad_phase(dy, w, d)
-            out = tg.tap_gemm(src, wk, taps, n_qh, n_qw,
-                              cin_tile=cin_t, cout_tile=cout_t,
-                              out_dtype=dy.dtype, interpret=INTERPRET)
-            di = di.at[:, r_h::d.S, r_w::d.S, :].set(out[..., :d.C])
+    for ph in phases:
+        plan = ph.plan
+        wk = wf[:, :, ph.c_h::d.S, ph.c_w::d.S][:, :, :ph.m_h, :ph.m_w]
+        wk = wk.transpose(2, 3, 0, 1).reshape(ph.m_h * ph.m_w, d.N, d.C)
+        wk = _pad_channels(
+            wk.transpose(0, 2, 1),
+            plan.cin_pad if plan.cin_pad == d.N else 128).transpose(0, 2, 1)
+        wk = _pad_channels(wk, plan.cout_pad if plan.cout_pad == d.C else 128)
+        src = dyn[:, ph.crop_h:, ph.crop_w:, :]
+        src = jnp.pad(src, ((0, 0), (ph.pad_lo_h, ph.pad_hi_h),
+                            (ph.pad_lo_w, ph.pad_hi_w), (0, 0)))
+        src = _pad_channels(src,
+                            plan.cin_pad if plan.cin_pad == d.N else 128)[None]
+        out = tg.tap_gemm(src, wk, plan.taps, ph.n_qh, ph.n_qw,
+                          cin_tile=plan.cin_tile, cout_tile=plan.cout_tile,
+                          out_dtype=dy.dtype, interpret=INTERPRET)
+        di = di.at[:, ph.r_h::d.S, ph.r_w::d.S, :].set(out[..., :d.C])
     return _from_nhwc(di)
 
 
@@ -150,21 +261,17 @@ def conv2d_input_grad(dy: jax.Array, w: jax.Array, d: ConvDims) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 def conv2d_weight_grad(x: jax.Array, dy: jax.Array, d: ConvDims) -> jax.Array:
-    xn = _to_nhwc(x)
-    xp = zero_pad(xn.transpose(0, 3, 1, 2), d.P_h, d.P_w).transpose(0, 2, 3, 1)
-    src = _phase_split(xp, d.S)
-    cin_p, cin_t = _channel_tile(d.C)
-    cout_p, cout_t = _channel_tile(d.N)
-    src = _pad_channels(src, cin_p if cin_p == d.C else 128)
-    dyn = _pad_channels(_to_nhwc(dy), cout_p if cout_p == d.N else 128)
-    taps = [((kh % d.S) * d.S + (kw % d.S), kh // d.S, kw // d.S)
-            for kh in range(d.K_h) for kw in range(d.K_w)]
-    bytes_needed = (src.shape[0] * src.shape[2] * src.shape[3] * cin_t * 4
-                    + d.H_o * d.W_o * cout_t * 4
-                    + len(taps) * cin_t * cout_t * 4)
-    if not _vmem_ok(bytes_needed):
+    from repro.kernels import tap_gemm as tg
+    plan = weight_grad_plan(d)
+    if not plan.fits:
         return phase_decomp.weight_grad_phase(x, dy, d)
-    dw = tg.tap_wgrad(src, dyn, taps, d.H_o, d.W_o,
-                      cin_tile=cin_t, cout_tile=cout_t, interpret=INTERPRET)
+    xp = zero_pad(x, d.P_h, d.P_w, d.p_h_hi, d.p_w_hi)
+    src = _phase_split(_to_nhwc(xp), d.S)
+    src = _pad_channels(src, plan.cin_pad if plan.cin_pad == d.C else 128)
+    dyn = _pad_channels(_to_nhwc(dy),
+                        plan.cout_pad if plan.cout_pad == d.N else 128)
+    dw = tg.tap_wgrad(src, dyn, plan.taps, d.H_o, d.W_o,
+                      cin_tile=plan.cin_tile, cout_tile=plan.cout_tile,
+                      interpret=INTERPRET)
     dw = dw[:, :d.C, :d.N].reshape(d.K_h, d.K_w, d.C, d.N)
     return dw.transpose(3, 2, 0, 1).astype(x.dtype)

@@ -20,7 +20,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_config, get_smoke_config
 from repro.data.pipeline import DataConfig, make_batch
@@ -44,6 +43,11 @@ def main(argv=None):
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--conv-mode", default=None,
+                    choices=["lax", "traditional", "bp_im2col", "bp_phase",
+                             "pallas"],
+                    help="backprop engine for conv layers (default: "
+                         "cfg.conv_mode)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--log-every", type=int, default=10)
@@ -61,7 +65,8 @@ def main(argv=None):
     opt_cfg = adamw.AdamWConfig(peak_lr=args.lr)
     step_fn = jax.jit(TS.make_train_step(
         cfg, opt_cfg, total_steps=args.steps,
-        warmup=max(1, args.steps // 20), accum_steps=args.accum))
+        warmup=max(1, args.steps // 20), accum_steps=args.accum,
+        conv_mode=args.conv_mode))
 
     start_step = 0
     params = opt_state = None

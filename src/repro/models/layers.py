@@ -1,14 +1,20 @@
-"""Primitive layers: linear / norm / embedding / RoPE / SwiGLU.
+"""Primitive layers: linear / norm / embedding / RoPE / SwiGLU / conv2d.
 
 Functional style: ``init_*`` builds param pytrees (optionally with a stacked
 leading layer dim for lax.scan), ``*_apply`` consumes them.  Parameter tree
 keys are stable and path-matchable by repro.dist.sharding rules.
+
+Conv layers go through ``repro.core.conv2d`` so their backward pass runs the
+BP-im2col engine selected by ``mode=`` (usually ``cfg.conv_mode``) rather
+than XLA's native conv autodiff.
 """
 
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+from repro.core import conv as C
 
 
 def _maybe_stack(shape, L):
@@ -48,6 +54,47 @@ def embed(p, ids):
 def unembed(p, x):
     """Logits from (tied or dedicated) embedding matrix."""
     return x @ p["w"].astype(x.dtype).T
+
+
+# ---------------------------------------------------------------------------
+# Conv (BP-im2col backprop engine)
+# ---------------------------------------------------------------------------
+
+def init_conv2d(key, c_in: int, c_out: int, k, dtype, groups: int = 1,
+                L=None):
+    """OIHW conv kernel; k is an int or (kh, kw).  fan-in init."""
+    kh, kw = (k, k) if isinstance(k, int) else k
+    assert c_in % groups == 0 and c_out % groups == 0
+    fan_in = (c_in // groups) * kh * kw
+    w = jax.random.normal(
+        key, _maybe_stack((c_out, c_in // groups, kh, kw), L), jnp.float32)
+    return {"w": (w * fan_in ** -0.5).astype(dtype)}
+
+
+def conv2d_apply(p, x, *, stride: int = 1, padding=0,
+                 mode: str = "bp_phase", groups: int = 1):
+    """x (B, C, H, W) -> (B, N, H_o, W_o) through the selected engine.
+
+    padding: int, (ph, pw), or ((top, bottom), (left, right)).
+    """
+    return C.conv2d(x, p["w"].astype(x.dtype), stride, padding, mode, groups)
+
+
+def init_conv1d(key, c_in: int, c_out: int, k: int, dtype, groups: int = 1,
+                L=None):
+    w = jax.random.normal(
+        key, _maybe_stack((c_out, c_in // groups, k), L), jnp.float32)
+    fan_in = (c_in // groups) * k
+    return {"w": (w * fan_in ** -0.5).astype(dtype)}
+
+
+def conv1d_apply(p, x, *, stride: int = 1, padding=0, causal: bool = False,
+                 mode: str = "bp_phase", groups: int = 1):
+    """x (B, C, L) -> (B, N, L_o); causal=True left-pads K-1 (asymmetric)."""
+    w = p["w"].astype(x.dtype)
+    if causal:
+        return C.conv1d_causal(x, w, mode, groups)
+    return C.conv1d(x, w, stride, padding, mode, groups)
 
 
 # ---------------------------------------------------------------------------

@@ -23,7 +23,6 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from repro.dist.constraints import constrain_batch
-from repro.models import attention as A
 from repro.models import layers as L
 from repro.models import transformer as T
 

@@ -15,11 +15,9 @@ Decode variants scan the same stacks with per-layer cache slices as scan xs.
 
 from __future__ import annotations
 
-import functools
 import os
 
 import jax
-import jax.numpy as jnp
 
 # Roofline runs set REPRO_SCAN_UNROLL=9999: XLA's cost model does not
 # multiply while-loop bodies by trip count, so the dry-run unrolls the layer

@@ -8,7 +8,6 @@ over the data axis by dist.fsdp).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp

@@ -9,7 +9,7 @@ suitable for jax.jit with in/out shardings from repro.dist.sharding.
 
 from __future__ import annotations
 
-import functools
+import dataclasses
 from typing import Callable
 
 import jax
@@ -30,10 +30,18 @@ def make_train_step(cfg: ArchConfig, opt_cfg: adamw.AdamWConfig,
                     *, total_steps: int = 10000, warmup: int = 100,
                     schedule_name: str | None = None,
                     accum_steps: int = 1,
-                    compress_grads: bool = False) -> Callable:
+                    compress_grads: bool = False,
+                    conv_mode: str | None = None) -> Callable:
     """compress_grads: int8-quantize gradients with error feedback before
     the optimizer -- models the numerics of a compressed cross-pod gradient
-    all-reduce (the EF residual rides in opt_state['ef'])."""
+    all-reduce (the EF residual rides in opt_state['ef']).
+
+    conv_mode: override ``cfg.conv_mode`` for every conv layer in the model
+    (the backprop engine knob: lax | traditional | bp_im2col | bp_phase |
+    pallas).  jax.grad inside this step then dispatches conv backward through
+    the selected BP-im2col engine via the conv2d custom_vjp."""
+    if conv_mode is not None:
+        cfg = dataclasses.replace(cfg, conv_mode=conv_mode)
     sched_name = schedule_name or schedule.default_schedule_for(cfg.name)
     sched = schedule.SCHEDULES[sched_name]
 

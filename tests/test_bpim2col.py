@@ -95,6 +95,28 @@ def test_sparsity_claims_stride2():
             assert 0.70 <= sg <= 0.95, (net, layer, sg)
 
 
+@pytest.mark.parametrize("d", CASES, ids=lambda d: f"S{d.S}K{d.K_h}P{d.P_h}H{d.H_i}")
+def test_lowered_sparsity_loss_against_materialized(d, rng):
+    """`lowered_sparsity_loss` (analytic count) == the zero fraction of the
+    actually-materialized lowered matrix B (brute force).  Strictly-nonzero
+    dy guarantees every zero entry in the lowered matrix is structural."""
+    dy = jnp.asarray(np.abs(rng.randn(d.B, d.N, d.H_o, d.W_o)) + 0.5,
+                     jnp.float32)
+    lowered = np.asarray(bp.gather_lowered_B_loss(dy, d))
+    brute = float((lowered == 0.0).mean())
+    assert abs(brute - bp.lowered_sparsity_loss(d)) < 1e-9, (
+        d, brute, bp.lowered_sparsity_loss(d))
+
+
+def test_lowered_sparsity_grad_against_materialized(rng):
+    d = CASES[0]
+    dy = jnp.asarray(np.abs(rng.randn(d.B, d.N, d.H_o, d.W_o)) + 0.5,
+                     jnp.float32)
+    a = np.asarray(bp.gather_lowered_A_grad(dy, d))
+    brute = float((a == 0.0).mean())
+    assert abs(brute - bp.lowered_sparsity_grad(d)) < 1e-9
+
+
 def test_null_addresses_marked():
     d = CASES[0]
     addr = jnp.arange(np.prod(d.lowered_B_shape_loss()), dtype=jnp.int32)
@@ -106,6 +128,7 @@ def test_null_addresses_marked():
     assert (out[ok] >= 0).all() and (out[ok] < size).all()
 
 
+@pytest.mark.slow
 @settings(max_examples=40, deadline=None)
 @given(
     hi=st.integers(4, 14), k=st.integers(1, 4), s=st.integers(1, 3),

@@ -14,6 +14,7 @@ import sys
 import textwrap
 
 import numpy as np
+import pytest
 
 ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 
@@ -71,6 +72,7 @@ _SCRIPT = textwrap.dedent("""
 """)
 
 
+@pytest.mark.slow
 def test_sharded_train_step_executes_and_matches_single_device():
     out = subprocess.run(
         [sys.executable, "-c", _SCRIPT % {"root": ROOT}],

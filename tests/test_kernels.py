@@ -114,6 +114,7 @@ def test_tap_wgrad_against_oracle():
     np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
 
 
+@pytest.mark.slow
 @settings(max_examples=25, deadline=None)
 @given(hi=st.integers(4, 12), k=st.integers(1, 3), s=st.integers(1, 3),
        c=st.integers(1, 4), n=st.integers(1, 4), seed=st.integers(0, 999))

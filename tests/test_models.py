@@ -9,7 +9,7 @@ import numpy as np
 import pytest
 
 from repro.configs import all_arch_ids, get_config, get_smoke_config
-from repro.configs.base import SHAPES, applicable_shapes
+from repro.configs.base import applicable_shapes
 from repro.models import build_model
 from repro.optim import adamw
 from repro.train import train_step as TS

@@ -2,13 +2,11 @@
 checkpointing, fault tolerance, sharding rules."""
 
 import dataclasses
-import os
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.configs import get_smoke_config
 from repro.data.pipeline import DataConfig, make_batch

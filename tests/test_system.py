@@ -1,8 +1,6 @@
 """End-to-end system tests: training drivers, conv-mode training, serving,
 checkpoint-resume equivalence."""
 
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -58,6 +56,7 @@ def test_train_launcher_loss_decreases(tmp_path):
     assert losses[-1] < losses[0]
 
 
+@pytest.mark.slow
 def test_train_resume_is_exact(tmp_path):
     """Crash/restart: resuming from a checkpoint reproduces the uninterrupted
     run exactly (deterministic pipeline + exact state restore)."""
@@ -146,6 +145,7 @@ def test_moe_capacity_drops_are_bounded():
     assert float(aux["moe_lb"]) > 0
 
 
+@pytest.mark.slow
 def test_compressed_gradients_still_train():
     """int8 gradient compression with error feedback: training descends and
     tracks the uncompressed trajectory closely (cross-pod all-reduce
