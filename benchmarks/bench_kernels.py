@@ -1,22 +1,32 @@
-"""Kernel microbenchmarks: wall-clock of the three conv backprop engines and
-the Pallas kernels (interpret mode) on CPU, plus derived bytes-moved ratios.
+"""Kernel microbenchmarks: wall-clock of the conv backprop engines and the
+Pallas kernels (interpret mode) on CPU, plus derived bytes-moved ratios and
+the static tile plans the Pallas lanes dispatch with.
 
 Two levels are measured per case:
   * raw engine primitives (input_grad_*, weight_grad_*), as before;
   * the end-to-end ``jax.grad`` path through the ``conv2d`` custom_vjp --
-    what a training step actually runs per mode.
+    what a training step actually runs per mode (including ``pallas``).
 
 interpret-mode wall-clock is NOT TPU performance; the derived columns
-(bytes/elements moved) are the hardware-independent quantities.
+(bytes/elements moved, tile plans, fallback counts) are the
+hardware-independent quantities -- they are what future TPU runs
+(``INTERPRET = False``) compare against.
 
-    PYTHONPATH=src python benchmarks/bench_kernels.py [--tiny]
+    PYTHONPATH=src python benchmarks/bench_kernels.py [--tiny] \
+        [--json BENCH_kernels.json]
 
-``--tiny`` runs one small shape with 1 rep (the CI smoke lane).
+``--tiny`` runs one small shape with 1 rep (the CI smoke lane) and FAILS if
+any case falls off the Pallas path (tile-plan fallback counter > 0).
+``--json`` writes the machine-readable record: per-case wall-clock,
+bytes-moved ratios, tile plans (fits / spatial splits / VMEM footprint),
+and the planner's hit/fallback event counts.  The committed
+``BENCH_kernels.json`` is the perf baseline for later PRs.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
@@ -29,18 +39,22 @@ sys.path.insert(0, "src")
 from repro.core import bpim2col, im2col_ref, phase_decomp   # noqa: E402
 from repro.core.conv import conv2d                          # noqa: E402
 from repro.core.im2col_ref import ConvDims                  # noqa: E402
+from repro.kernels import ops                               # noqa: E402
 
 CASES = [
     ConvDims(B=2, C=16, H_i=32, W_i=32, N=32, K_h=3, K_w=3, S=2, P_h=1, P_w=1),
     ConvDims(B=2, C=32, H_i=28, W_i=28, N=32, K_h=3, K_w=3, S=2, P_h=1, P_w=1),
-    ConvDims(B=1, C=64, H_i=14, W_i=14, N=128, K_h=1, K_w=1, S=2, P_h=0, P_w=0),
+    # Realistic mid-network layer: a >=56x56 spatial plane that previously
+    # had to prove the WHOLE plane fits VMEM to stay on the Pallas path.
+    ConvDims(B=1, C=128, H_i=56, W_i=56, N=128, K_h=3, K_w=3, S=2,
+             P_h=1, P_w=1),
 ]
 
 TINY_CASES = [
     ConvDims(B=1, C=4, H_i=12, W_i=12, N=8, K_h=3, K_w=3, S=2, P_h=1, P_w=1),
 ]
 
-GRAD_MODES = ("traditional", "bp_im2col", "bp_phase")
+GRAD_MODES = ("traditional", "bp_im2col", "bp_phase", "pallas")
 
 
 def _t(fn, *args, reps=5):
@@ -63,6 +77,22 @@ def _grad_fn(d: ConvDims, mode: str):
     return g
 
 
+def _bytes_moved(d: ConvDims) -> dict[str, float]:
+    """Hardware-independent reorganization traffic: how many elements the
+    traditional zero-space datapath moves per compact element (BP-im2col
+    moves none of the zero-space)."""
+    loss = im2col_ref.reorg_traffic_elems_loss(d)
+    grad = im2col_ref.reorg_traffic_elems_grad(d)
+    compact = d.B * d.N * d.H_o * d.W_o
+    return {
+        "loss_offchip_ratio": round(loss["offchip_stream"] / compact, 3),
+        "grad_offchip_ratio": round(grad["offchip_stream"] / compact, 3),
+        "loss_extra_storage_elems": loss["extra_storage"],
+        "grad_extra_storage_elems": grad["extra_storage"],
+        "lowered_sparsity": round(bpim2col.lowered_sparsity_loss(d), 3),
+    }
+
+
 def run(csv=True, cases=None, reps=5, grad_modes=GRAD_MODES):
     rng = np.random.RandomState(0)
     rows = []
@@ -73,19 +103,22 @@ def run(csv=True, cases=None, reps=5, grad_modes=GRAD_MODES):
         t_trad = _t(jax.jit(lambda a, b: im2col_ref.input_grad_explicit(a, b, d)), dy, w, reps=reps)
         t_bp = _t(jax.jit(lambda a, b: bpim2col.input_grad_implicit(a, b, d)), dy, w, reps=reps)
         t_ph = _t(jax.jit(lambda a, b: phase_decomp.input_grad_phase(a, b, d)), dy, w, reps=reps)
+        t_pl = _t(jax.jit(lambda a, b: ops.conv2d_input_grad(a, b, d)), dy, w, reps=reps)
         tg_trad = _t(jax.jit(lambda a, b: im2col_ref.weight_grad_explicit(a, b, d)), x, dy, reps=reps)
         tg_ph = _t(jax.jit(lambda a, b: phase_decomp.weight_grad_phase(a, b, d)), x, dy, reps=reps)
-        sparsity = bpim2col.lowered_sparsity_loss(d)
+        tg_pl = _t(jax.jit(lambda a, b: ops.conv2d_weight_grad(a, b, d)), x, dy, reps=reps)
         row = {
             "case": f"{d.H_i}/{d.C}/{d.N}/{d.K_h}/{d.S}/{d.P_h}",
             "dI_trad_us": round(t_trad, 1),
             "dI_bp_gather_us": round(t_bp, 1),
             "dI_phase_us": round(t_ph, 1),
+            "dI_pallas_us": round(t_pl, 1),
             "dI_speedup_phase": round(t_trad / t_ph, 2),
             "dW_trad_us": round(tg_trad, 1),
             "dW_phase_us": round(tg_ph, 1),
+            "dW_pallas_us": round(tg_pl, 1),
             "dW_speedup_phase": round(tg_trad / tg_ph, 2),
-            "lowered_sparsity": round(sparsity, 3),
+            "lowered_sparsity": round(bpim2col.lowered_sparsity_loss(d), 3),
         }
         # End-to-end jax.grad through the custom_vjp (the training path).
         for mode in grad_modes:
@@ -99,18 +132,67 @@ def run(csv=True, cases=None, reps=5, grad_modes=GRAD_MODES):
     return rows
 
 
+def _json_record(rows, cases) -> dict:
+    """Attach the static tile plans + traffic ratios to the timing rows."""
+    cases = list(cases)
+    record_cases = []
+    for d, row in zip(cases, rows):
+        plan = ops.plan_report(d)
+        record_cases.append({
+            "dims": {"B": d.B, "C": d.C, "H_i": d.H_i, "W_i": d.W_i,
+                     "N": d.N, "K_h": d.K_h, "K_w": d.K_w, "S": d.S,
+                     "P_h": d.P_h, "P_w": d.P_w},
+            "timings_us": row,
+            "bytes_moved": _bytes_moved(d),
+            "plan": plan,
+            "fits": plan["pallas_path"],
+            "input_grad_plan_none": not plan["input_grad"].get("fused",
+                                                               False),
+        })
+    events = ops.plan_events()
+    fallbacks = sum(v for k, v in events.items() if k.endswith("_fallback"))
+    return {
+        "bench": "bench_kernels",
+        "schema": 1,
+        "vmem_budget_bytes": ops.VMEM_BUDGET_BYTES,
+        "interpret": ops.INTERPRET,
+        "cases": record_cases,
+        "plan_events": events,
+        "tile_plan_fallbacks": fallbacks,
+        "pallas_path_all_cases": all(c["fits"] for c in record_cases),
+    }
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--tiny", action="store_true",
                     help="one small shape, 1 rep (CI smoke)")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write the machine-readable benchmark record")
     args = ap.parse_args()
+    cases = TINY_CASES if args.tiny else CASES
+    reps = 1 if args.tiny else 5
+    ops.clear_tile_plan_cache()
+    ops.reset_plan_events()
+    rows = run(cases=cases, reps=reps)
+    assert rows and all(v > 0 for r in rows for k, v in r.items()
+                        if k.endswith("_us")), "bench produced no timings"
+    record = _json_record(rows, cases)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(record, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {args.json}", file=sys.stderr)
     if args.tiny:
-        rows = run(cases=TINY_CASES, reps=1,
-                   grad_modes=GRAD_MODES + ("pallas",))
-        assert rows and all(v > 0 for r in rows for k, v in r.items()
-                            if k.endswith("_us")), "bench produced no timings"
-    else:
-        run()
+        # CI gate (with or without --json): a tiny shape falling off the
+        # Pallas path is a planner regression, not a capacity problem.
+        if record["tile_plan_fallbacks"] > 0 or \
+                not record["pallas_path_all_cases"]:
+            print(f"FAIL: tile-plan fallbacks="
+                  f"{record['tile_plan_fallbacks']}, "
+                  f"pallas_path_all_cases="
+                  f"{record['pallas_path_all_cases']}", file=sys.stderr)
+            raise SystemExit(1)
 
 
 if __name__ == "__main__":

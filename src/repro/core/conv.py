@@ -298,3 +298,16 @@ def depthwise_causal_conv1d(x: jax.Array, w: jax.Array,
 
 def output_shape(d: ConvDims) -> tuple[int, int, int, int]:
     return (d.B, d.N, d.H_o, d.W_o)
+
+
+def conv_plan_report(x_shape, w_shape, stride: int = 1, padding=0,
+                     groups: int = 1,
+                     budget: int | None = None) -> dict[str, object]:
+    """Static Pallas dispatch summary for one conv layer: per-op tile plans
+    (spatial/channel tiles, split counts, VMEM footprint) and whether the
+    whole layer stays on the Pallas path.  Convenience wrapper over
+    ``repro.kernels.ops.plan_report`` taking array shapes instead of a
+    ``ConvDims``; pure planner introspection, no arrays are touched."""
+    from repro.kernels import ops
+    d = make_dims(x_shape, w_shape, stride, padding, groups)
+    return ops.plan_report(d, budget)

@@ -37,14 +37,18 @@ from repro.core.im2col_ref import ConvDims, rot180, zero_pad
 # Input gradient (loss calculation), phase-decomposed
 # ---------------------------------------------------------------------------
 
-def _phase_geometry(r: int, a: int, S: int, K: int, H_i: int, H_o: int):
+def phase_geometry(r: int, a: int, S: int, K: int, H_i: int, H_o: int):
     """Static per-phase geometry: tap start c_r, tap count M_r, input offset
-    off_r, and the phase's output length."""
+    off_r, and the phase's output length.  Shared with the Pallas planners
+    (``repro.kernels.ops``), which fuse all S*S phases into one dispatch."""
     c_r = (a - r) % S
     M_r = (K - c_r + S - 1) // S          # number of taps kh = c_r + m*S < K
     off_r = (r + c_r - a) // S
     n_q = (H_i - r + S - 1) // S          # outputs q with q*S + r < H_i
     return c_r, M_r, off_r, n_q
+
+
+_phase_geometry = phase_geometry          # back-compat alias
 
 
 def input_grad_phase(dy: jax.Array, w: jax.Array, d: ConvDims) -> jax.Array:
@@ -60,9 +64,9 @@ def input_grad_phase(dy: jax.Array, w: jax.Array, d: ConvDims) -> jax.Array:
     wf = rot180(w)                                     # (N, C, K_h, K_w)
     di = jnp.zeros((d.B, d.C, d.H_i, d.W_i), dtype=dy.dtype)
     for r_h in range(min(d.S, d.H_i)):
-        c_h, m_h, off_h, n_qh = _phase_geometry(r_h, a_h, d.S, d.K_h, d.H_i, d.H_o)
+        c_h, m_h, off_h, n_qh = phase_geometry(r_h, a_h, d.S, d.K_h, d.H_i, d.H_o)
         for r_w in range(min(d.S, d.W_i)):
-            c_w, m_w, off_w, n_qw = _phase_geometry(r_w, a_w, d.S, d.K_w, d.W_i, d.W_o)
+            c_w, m_w, off_w, n_qw = phase_geometry(r_w, a_w, d.S, d.K_w, d.W_i, d.W_o)
             if n_qh == 0 or n_qw == 0:
                 continue
             if m_h == 0 or m_w == 0:

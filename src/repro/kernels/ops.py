@@ -5,16 +5,23 @@ Responsibilities:
     slices on COMPACT data, done once at trace time;
   * static tap-table construction (the BP-im2col address mapping, resolved
     per stride phase);
-  * tile-size selection under an explicit VMEM budget, with a documented
-    fallback to the pure-jnp phase decomposition when a shape cannot be
-    tiled into VMEM (the fallback is semantically identical).
+  * tile-plan SEARCH under an explicit VMEM budget: the planners walk
+    (spatial tile, cin tile, cout tile) candidates -- full plane first, then
+    halving the larger spatial dim, then halving channel tiles -- and take
+    the first configuration whose per-grid-step VMEM footprint fits.  A
+    shape only falls back to the jnp phase decomposition when even the
+    minimal 1x1-spatial / smallest-channel tiling exceeds the budget
+    (genuinely degenerate geometry or an absurdly small budget), never
+    merely because the full spatial plane is large.
 
-Tap tables and tile choices depend only on the static ``ConvDims``, so they
-are memoized (``functools.lru_cache``): repeated layer shapes -- every step
-of a training run retraces the same convs -- skip the VMEM budgeting and tap
-enumeration entirely.  ``tile_plan_cache_info()`` exposes hit counts for
-tests and debugging; ``clear_tile_plan_cache()`` resets (e.g. after changing
-``VMEM_BUDGET_BYTES``).
+Tap tables and tile choices depend only on the static ``ConvDims`` and the
+budget, so they are memoized (``functools.lru_cache``) with the budget as an
+explicit cache-key argument: mutating ``VMEM_BUDGET_BYTES`` (as tests and
+benchmarks do) re-plans instead of returning stale cached plans.  Repeated
+layer shapes -- every step of a training run retraces the same convs --
+skip the search entirely.  ``tile_plan_cache_info()`` exposes hit counts;
+``clear_tile_plan_cache()`` resets; ``plan_events()`` counts planned-vs-
+fallback outcomes (one event per unique shape/budget) for benchmarks & CI.
 
 ``interpret`` defaults to True because this container is CPU-only; on real
 TPU hardware set ``repro.kernels.ops.INTERPRET = False``.
@@ -30,10 +37,37 @@ import jax.numpy as jnp
 
 from repro.core.im2col_ref import ConvDims, rot180, zero_pad
 from repro.core import phase_decomp
+from repro.kernels import tap_gemm as tg
+from repro.kernels.tap_gemm import _cdiv, _taps_halo
 
 INTERPRET = True
 VMEM_BUDGET_BYTES = 14 * 1024 * 1024
 _ELEM_BYTES = 4            # budget in f32 elements (worst case)
+
+#: planned-vs-fallback outcomes, one event per unique (ConvDims, budget)
+#: planner invocation (memoized calls do not re-count).
+PLAN_EVENTS: dict[str, int] = {}
+
+
+def _count_event(name: str) -> None:
+    PLAN_EVENTS[name] = PLAN_EVENTS.get(name, 0) + 1
+
+
+def plan_events() -> dict[str, int]:
+    return dict(PLAN_EVENTS)
+
+
+def reset_plan_events() -> None:
+    PLAN_EVENTS.clear()
+
+
+def _canonical(d: ConvDims) -> ConvDims:
+    """Resolve the P_*_hi = -1 'symmetric' sentinel to explicit high-side
+    pads so geometrically identical layers share one plan-cache entry (and
+    one plan event) no matter how the caller spelled the padding."""
+    if d.P_h_hi == d.p_h_hi and d.P_w_hi == d.p_w_hi:
+        return d
+    return dataclasses.replace(d, P_h_hi=d.p_h_hi, P_w_hi=d.p_w_hi)
 
 
 # ---------------------------------------------------------------------------
@@ -48,12 +82,17 @@ def _from_nhwc(x):
     return x.transpose(0, 3, 1, 2)
 
 
-def _pad_channels(x, mult):
-    c = x.shape[-1]
-    cp = -(-c // mult) * mult
-    if cp == c:
+def _pad_to(x, n: int, axis: int = -1):
+    """Zero-pad one axis of ``x`` up to exactly ``n`` (no-op when already
+    there).  Every engine uses this to bring channel dims to the plan's
+    padded sizes before entering a kernel."""
+    c = x.shape[axis]
+    if c == n:
         return x
-    return jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, cp - c)])
+    assert c < n, f"cannot pad axis {axis} from {c} down to {n}"
+    pads = [(0, 0)] * x.ndim
+    pads[axis % x.ndim] = (0, n - c)
+    return jnp.pad(x, pads)
 
 
 def _channel_tile(c: int) -> tuple[int, int]:
@@ -74,47 +113,107 @@ def _phase_split(xp: jax.Array, S: int) -> jax.Array:
     return xp.transpose(2, 4, 0, 1, 3, 5).reshape(S * S, b, hp2 // S, wp2 // S, c)
 
 
+def _phase_unsplit(planes: jax.Array, S: int, h: int, w: int) -> jax.Array:
+    """(S*S, B, Hq, Wq, C) -> (B, h, w, C): the exact inverse of
+    ``_phase_split`` -- a pure reshape/transpose/crop, no scatter."""
+    s2, b, hq, wq, c = planes.shape
+    assert s2 == S * S
+    x = planes.reshape(S, S, b, hq, wq, c).transpose(2, 3, 0, 4, 1, 5)
+    return x.reshape(b, hq * S, wq * S, c)[:, :h, :w, :]
+
+
 # ---------------------------------------------------------------------------
-# Memoized tile-size / tap-table selection (static per ConvDims)
+# Tile search: (spatial tile, cin tile, cout tile) under the VMEM budget
+# ---------------------------------------------------------------------------
+
+def _spatial_candidates(oh: int, ow: int):
+    """Full plane first, then halve the larger spatial dim (1x, 2x, 4x, ...
+    splits) down to a 1x1 tile."""
+    th, tw = oh, ow
+    while True:
+        yield th, tw
+        if th <= 1 and tw <= 1:
+            return
+        if th >= tw and th > 1:
+            th = _cdiv(th, 2)
+        else:
+            tw = _cdiv(tw, 2)
+
+
+def _channel_candidates(cin_pad: int, cout_pad: int):
+    """Full (<=128) channel tiles first, then halve both while the halves
+    still divide the padded channel counts."""
+    ci, co = min(cin_pad, 128), min(cout_pad, 128)
+    yield ci, co
+    while ci > 1 or co > 1:
+        nci = ci // 2 if (ci > 1 and ci % 2 == 0
+                          and cin_pad % (ci // 2) == 0) else ci
+        nco = co // 2 if (co > 1 and co % 2 == 0
+                          and cout_pad % (co // 2) == 0) else co
+        if (nci, nco) == (ci, co):
+            return
+        ci, co = nci, nco
+        yield ci, co
+
+
+def _search_tiles(oh, ow, cin_pad, cout_pad, cost_fn, budget):
+    """First candidate whose cost fits: spatial splits are exhausted before
+    channel tiles shrink, so large planes tile spatially at full MXU width.
+    Returns (th, tw, n_th, n_tw, cin_t, cout_t, bytes, fits)."""
+    last = None
+    for cin_t, cout_t in _channel_candidates(cin_pad, cout_pad):
+        for th, tw in _spatial_candidates(oh, ow):
+            bytes_needed = cost_fn(th, tw, cin_t, cout_t)
+            last = (th, tw, _cdiv(oh, th), _cdiv(ow, tw), cin_t, cout_t,
+                    bytes_needed)
+            if bytes_needed <= budget:
+                return (*last, True)
+    return (*last, False)
+
+
+# ---------------------------------------------------------------------------
+# Memoized tile plans (static per ConvDims x budget)
 # ---------------------------------------------------------------------------
 
 @dataclasses.dataclass(frozen=True)
 class TilePlan:
-    """One Pallas dispatch: channel tiling, tap table, VMEM verdict."""
+    """One Pallas dispatch: channel + spatial tiling, tap table, footprint."""
     fits: bool
     cin_pad: int
     cin_tile: int
     cout_pad: int
     cout_tile: int
     taps: tuple[tuple[int, int, int], ...]
+    oh_tile: int
+    ow_tile: int
+    n_th: int
+    n_tw: int
+    halo_h: int
+    halo_w: int
     bytes_needed: int
+
+    @property
+    def spatial_splits(self) -> int:
+        return self.n_th * self.n_tw
 
 
 @dataclasses.dataclass(frozen=True)
 class PhasePlan:
-    """Input-grad dispatch geometry for one output stride phase."""
-    r_h: int
-    r_w: int
-    c_h: int
-    c_w: int
-    m_h: int
-    m_w: int
-    n_qh: int
+    """Fused input-grad dispatch: uniform geometry for ALL S*S output stride
+    phases, realized as ONE ``tap_gemm_phased`` launch.
+
+    Per-phase tap offsets are pre-shifted by ``off_phase - min(off)`` so
+    every phase reads the same globally padded dY at a uniform base; the
+    output planes are un-phase-split by the inverse of ``_phase_split``.
+    """
+    n_qh: int            # uniform per-phase output rows = ceil(H_i / S)
     n_qw: int
-    crop_h: int
-    crop_w: int
-    pad_lo_h: int
-    pad_lo_w: int
-    pad_hi_h: int
-    pad_hi_w: int
-    plan: TilePlan
-
-
-def _phase_plane_hw(d: ConvDims) -> tuple[int, int]:
-    """Spatial extent of one phase plane of the padded input."""
-    hp = d.H_i + d.P_h + d.p_h_hi
-    wp = d.W_i + d.P_w + d.p_w_hi
-    return -(-hp // d.S), -(-wp // d.S)
+    g_lo_h: int          # global low-side dY padding (covers min offset)
+    g_lo_w: int
+    t_max: int           # widest per-phase tap table (stack padded to this)
+    phase_specs: tuple   # per plane r_h*S+r_w: (c_h, c_w, m_h, m_w) | None
+    phase_taps: tuple    # per plane: tuple[(j, du, dv), ...]
+    tile: TilePlan
 
 
 def _forward_taps(d: ConvDims) -> tuple[tuple[int, int, int], ...]:
@@ -123,80 +222,159 @@ def _forward_taps(d: ConvDims) -> tuple[tuple[int, int, int], ...]:
                  for kh in range(d.K_h) for kw in range(d.K_w))
 
 
+def forward_plan(d: ConvDims, budget: int | None = None) -> TilePlan:
+    return _forward_plan(_canonical(d),
+                         VMEM_BUDGET_BYTES if budget is None else budget)
+
+
 @functools.lru_cache(maxsize=4096)
-def forward_plan(d: ConvDims) -> TilePlan:
-    cin_p, cin_t = _channel_tile(d.C)
-    cout_p, cout_t = _channel_tile(d.N)
+def _forward_plan(d: ConvDims, budget: int) -> TilePlan:
+    cin_p, _ = _channel_tile(d.C)
+    cout_p, _ = _channel_tile(d.N)
     taps = _forward_taps(d)
-    hps, wps = _phase_plane_hw(d)
-    bytes_needed = (d.S * d.S * hps * wps * cin_t * _ELEM_BYTES
-                    + len(taps) * cin_t * cout_t * _ELEM_BYTES
-                    + 2 * d.H_o * d.W_o * cout_t * _ELEM_BYTES)
-    return TilePlan(bytes_needed <= VMEM_BUDGET_BYTES, cin_p, cin_t,
-                    cout_p, cout_t, taps, bytes_needed)
+    halo_h, halo_w = _taps_halo(taps)
+    s2 = d.S * d.S
+
+    def cost(th, tw, cit, cot):
+        return _ELEM_BYTES * (s2 * (th + halo_h) * (tw + halo_w) * cit
+                              + len(taps) * cit * cot
+                              + 2 * th * tw * cot)
+
+    th, tw, n_th, n_tw, cit, cot, bytes_needed, fits = _search_tiles(
+        d.H_o, d.W_o, cin_p, cout_p, cost, budget)
+    _count_event("forward_pallas" if fits else "forward_fallback")
+    return TilePlan(fits, cin_p, cit, cout_p, cot, taps, th, tw, n_th, n_tw,
+                    halo_h, halo_w, bytes_needed)
+
+
+def weight_grad_plan(d: ConvDims, budget: int | None = None) -> TilePlan:
+    return _weight_grad_plan(_canonical(d),
+                             VMEM_BUDGET_BYTES if budget is None else budget)
 
 
 @functools.lru_cache(maxsize=4096)
-def weight_grad_plan(d: ConvDims) -> TilePlan:
-    cin_p, cin_t = _channel_tile(d.C)
-    cout_p, cout_t = _channel_tile(d.N)
+def _weight_grad_plan(d: ConvDims, budget: int) -> TilePlan:
+    cin_p, _ = _channel_tile(d.C)
+    cout_p, _ = _channel_tile(d.N)
     taps = _forward_taps(d)
-    hps, wps = _phase_plane_hw(d)
-    bytes_needed = (d.S * d.S * hps * wps * cin_t * _ELEM_BYTES
-                    + d.H_o * d.W_o * cout_t * _ELEM_BYTES
-                    + len(taps) * cin_t * cout_t * _ELEM_BYTES)
-    return TilePlan(bytes_needed <= VMEM_BUDGET_BYTES, cin_p, cin_t,
-                    cout_p, cout_t, taps, bytes_needed)
+    halo_h, halo_w = _taps_halo(taps)
+    s2 = d.S * d.S
+
+    def cost(th, tw, cit, cot):
+        return _ELEM_BYTES * (s2 * (th + halo_h) * (tw + halo_w) * cit
+                              + th * tw * cot
+                              + 2 * len(taps) * cit * cot)
+
+    th, tw, n_th, n_tw, cit, cot, bytes_needed, fits = _search_tiles(
+        d.H_o, d.W_o, cin_p, cout_p, cost, budget)
+    _count_event("weight_grad_pallas" if fits else "weight_grad_fallback")
+    return TilePlan(fits, cin_p, cit, cout_p, cot, taps, th, tw, n_th, n_tw,
+                    halo_h, halo_w, bytes_needed)
+
+
+def input_grad_plan(d: ConvDims,
+                    budget: int | None = None) -> PhasePlan | None:
+    return _input_grad_plan(_canonical(d),
+                            VMEM_BUDGET_BYTES if budget is None else budget)
 
 
 @functools.lru_cache(maxsize=4096)
-def input_grad_plan(d: ConvDims) -> tuple[PhasePlan, ...] | None:
-    """Per-phase dispatch plans, or None if any phase exceeds the VMEM
-    budget (the whole op then falls back to the jnp phase decomposition)."""
+def _input_grad_plan(d: ConvDims, budget: int) -> PhasePlan | None:
+    """Single fused dispatch plan for all S*S output stride phases, or None
+    only when even the minimal tiling exceeds the budget (the op then falls
+    back to the jnp phase decomposition)."""
+    S = d.S
     a_h, a_w = d.K_h - 1 - d.P_h, d.K_w - 1 - d.P_w
-    cin_p, cin_t = _channel_tile(d.N)      # contraction dim = N
-    cout_p, cout_t = _channel_tile(d.C)
-    phases = []
-    for r_h in range(min(d.S, d.H_i)):
-        c_h, m_h, off_h, n_qh = phase_decomp._phase_geometry(
-            r_h, a_h, d.S, d.K_h, d.H_i, d.H_o)
-        for r_w in range(min(d.S, d.W_i)):
-            c_w, m_w, off_w, n_qw = phase_decomp._phase_geometry(
-                r_w, a_w, d.S, d.K_w, d.W_i, d.W_o)
-            if n_qh == 0 or n_qw == 0 or m_h == 0 or m_w == 0:
+    cin_p, _ = _channel_tile(d.N)      # contraction dim = N
+    cout_p, _ = _channel_tile(d.C)
+    n_qh, n_qw = _cdiv(d.H_i, S), _cdiv(d.W_i, S)
+    geo_h = [phase_decomp.phase_geometry(r, a_h, S, d.K_h, d.H_i, d.H_o)
+             for r in range(S)]
+    geo_w = [phase_decomp.phase_geometry(r, a_w, S, d.K_w, d.W_i, d.W_o)
+             for r in range(S)]
+    active = {(r_h, r_w) for r_h in range(S) for r_w in range(S)
+              if r_h < d.H_i and r_w < d.W_i
+              and geo_h[r_h][1] > 0 and geo_w[r_w][1] > 0}
+    if active:
+        min_off_h = min(geo_h[r][2] for r, _ in active)
+        min_off_w = min(geo_w[c][2] for _, c in active)
+        m_h_max = max(geo_h[r][2] - min_off_h + geo_h[r][1] for r, _ in active)
+        m_w_max = max(geo_w[c][2] - min_off_w + geo_w[c][1] for _, c in active)
+    else:                                  # dI identically zero; still plan
+        min_off_h = min_off_w = 0
+        m_h_max = m_w_max = 1
+    base_h, g_lo_h = max(0, min_off_h), max(0, -min_off_h)
+    base_w, g_lo_w = max(0, min_off_w), max(0, -min_off_w)
+    halo_h = base_h + m_h_max - 1
+    halo_w = base_w + m_w_max - 1
+
+    specs, taps_all, t_max = [], [], 1
+    for r_h in range(S):
+        c_h, m_h, off_h, _ = geo_h[r_h]
+        for r_w in range(S):
+            c_w, m_w, off_w, _ = geo_w[r_w]
+            if (r_h, r_w) not in active:
+                specs.append(None)
+                taps_all.append(())
                 continue
-            crop_h, crop_w = max(0, off_h), max(0, off_w)
-            pad_lo_h, pad_lo_w = max(0, -off_h), max(0, -off_w)
-            pad_hi_h = max(0, (n_qh - 1) + off_h + m_h - d.H_o)
-            pad_hi_w = max(0, (n_qw - 1) + off_w + m_w - d.W_o)
-            rows = d.H_o - crop_h + pad_lo_h + pad_hi_h
-            cols = d.W_o - crop_w + pad_lo_w + pad_hi_w
-            taps = tuple((0, mh, mw)
-                         for mh in range(m_h) for mw in range(m_w))
-            bytes_needed = (rows * cols * cin_t * _ELEM_BYTES
-                            + len(taps) * cin_t * cout_t * _ELEM_BYTES
-                            + 2 * n_qh * n_qw * cout_t * _ELEM_BYTES)
-            plan = TilePlan(bytes_needed <= VMEM_BUDGET_BYTES, cin_p, cin_t,
-                            cout_p, cout_t, taps, bytes_needed)
-            if not plan.fits:
-                return None
-            phases.append(PhasePlan(r_h, r_w, c_h, c_w, m_h, m_w, n_qh, n_qw,
-                                    crop_h, crop_w, pad_lo_h, pad_lo_w,
-                                    pad_hi_h, pad_hi_w, plan))
-    return tuple(phases)
+            sh = base_h + (off_h - min_off_h)
+            sw = base_w + (off_w - min_off_w)
+            taps_all.append(tuple(
+                (mh * m_w + mw, sh + mh, sw + mw)
+                for mh in range(m_h) for mw in range(m_w)))
+            specs.append((c_h, c_w, m_h, m_w))
+            t_max = max(t_max, m_h * m_w)
+
+    def cost(th, tw, cit, cot):
+        return _ELEM_BYTES * ((th + halo_h) * (tw + halo_w) * cit
+                              + t_max * cit * cot
+                              + 2 * th * tw * cot)
+
+    th, tw, n_th, n_tw, cit, cot, bytes_needed, fits = _search_tiles(
+        n_qh, n_qw, cin_p, cout_p, cost, budget)
+    _count_event("input_grad_pallas" if fits else "input_grad_fallback")
+    if not fits:
+        return None
+    tile = TilePlan(True, cin_p, cit, cout_p, cot, (), th, tw, n_th, n_tw,
+                    halo_h, halo_w, bytes_needed)
+    return PhasePlan(n_qh, n_qw, g_lo_h, g_lo_w, t_max,
+                     tuple(specs), tuple(taps_all), tile)
 
 
-_PLANNERS = (forward_plan, weight_grad_plan, input_grad_plan)
+_PLANNERS = {"forward_plan": _forward_plan,
+             "weight_grad_plan": _weight_grad_plan,
+             "input_grad_plan": _input_grad_plan}
 
 
 def tile_plan_cache_info() -> dict[str, object]:
     """lru_cache stats per planner (hits prove trace-time memoization)."""
-    return {p.__wrapped__.__name__: p.cache_info() for p in _PLANNERS}
+    return {name: fn.cache_info() for name, fn in _PLANNERS.items()}
 
 
 def clear_tile_plan_cache() -> None:
-    for p in _PLANNERS:
-        p.cache_clear()
+    for fn in _PLANNERS.values():
+        fn.cache_clear()
+
+
+def plan_report(d: ConvDims, budget: int | None = None) -> dict[str, object]:
+    """Static per-shape dispatch summary (used by benchmarks and tests)."""
+    def _tile(p: TilePlan) -> dict[str, object]:
+        return {"fits": p.fits, "spatial_splits": p.spatial_splits,
+                "spatial_tile": [p.oh_tile, p.ow_tile],
+                "chan_tile": [p.cin_tile, p.cout_tile],
+                "halo": [p.halo_h, p.halo_w],
+                "bytes_needed": p.bytes_needed}
+    f = forward_plan(d, budget)
+    wg = weight_grad_plan(d, budget)
+    ig = input_grad_plan(d, budget)
+    report = {
+        "forward": _tile(f),
+        "weight_grad": _tile(wg),
+        "input_grad": ({"fused": True, "t_max": ig.t_max, **_tile(ig.tile)}
+                       if ig is not None else {"fused": False, "fits": False}),
+        "pallas_path": bool(f.fits and wg.fits and ig is not None),
+    }
+    return report
 
 
 # ---------------------------------------------------------------------------
@@ -204,7 +382,6 @@ def clear_tile_plan_cache() -> None:
 # ---------------------------------------------------------------------------
 
 def conv2d_forward(x: jax.Array, w: jax.Array, d: ConvDims) -> jax.Array:
-    from repro.kernels import tap_gemm as tg
     plan = forward_plan(d)
     if not plan.fits:
         return jax.lax.conv_general_dilated(
@@ -212,47 +389,48 @@ def conv2d_forward(x: jax.Array, w: jax.Array, d: ConvDims) -> jax.Array:
             dimension_numbers=("NCHW", "OIHW", "NCHW"))
     xp = zero_pad(x, d.P_h, d.P_w, d.p_h_hi, d.p_w_hi)
     src = _phase_split(_to_nhwc(xp), d.S)            # (S*S, B, HpS, WpS, C)
-    src = _pad_channels(src, plan.cin_pad if plan.cin_pad == d.C else 128)
+    src = _pad_to(src, plan.cin_pad)
     wt = w.transpose(2, 3, 1, 0).reshape(d.K_h * d.K_w, d.C, d.N)
-    wt = _pad_channels(wt.transpose(0, 2, 1),
-                       plan.cin_pad if plan.cin_pad == d.C else 128)
-    wt = _pad_channels(wt.transpose(0, 2, 1),
-                       plan.cout_pad if plan.cout_pad == d.N else 128)
+    wt = _pad_to(wt, plan.cin_pad, axis=1)
+    wt = _pad_to(wt, plan.cout_pad, axis=2)
     y = tg.tap_gemm(src, wt, plan.taps, d.H_o, d.W_o,
                     cin_tile=plan.cin_tile, cout_tile=plan.cout_tile,
+                    oh_tile=plan.oh_tile, ow_tile=plan.ow_tile,
                     out_dtype=x.dtype, interpret=INTERPRET)
     return _from_nhwc(y[..., :d.N])
 
 
 # ---------------------------------------------------------------------------
-# Input gradient (transposed mode): one tap-GEMM per output stride phase
+# Input gradient (transposed mode): ALL stride phases in one fused launch
 # ---------------------------------------------------------------------------
 
 def conv2d_input_grad(dy: jax.Array, w: jax.Array, d: ConvDims) -> jax.Array:
-    from repro.kernels import tap_gemm as tg
-    phases = input_grad_plan(d)
-    if phases is None:
+    pp = input_grad_plan(d)
+    if pp is None:
         return phase_decomp.input_grad_phase(dy, w, d)
+    tile, S = pp.tile, d.S
     wf = rot180(w)                                       # (N, C, K_h, K_w)
-    dyn = _to_nhwc(dy)                                   # (B, Ho, Wo, N)
-    di = jnp.zeros((d.B, d.H_i, d.W_i, d.C), dtype=dy.dtype)
-    for ph in phases:
-        plan = ph.plan
-        wk = wf[:, :, ph.c_h::d.S, ph.c_w::d.S][:, :, :ph.m_h, :ph.m_w]
-        wk = wk.transpose(2, 3, 0, 1).reshape(ph.m_h * ph.m_w, d.N, d.C)
-        wk = _pad_channels(
-            wk.transpose(0, 2, 1),
-            plan.cin_pad if plan.cin_pad == d.N else 128).transpose(0, 2, 1)
-        wk = _pad_channels(wk, plan.cout_pad if plan.cout_pad == d.C else 128)
-        src = dyn[:, ph.crop_h:, ph.crop_w:, :]
-        src = jnp.pad(src, ((0, 0), (ph.pad_lo_h, ph.pad_hi_h),
-                            (ph.pad_lo_w, ph.pad_hi_w), (0, 0)))
-        src = _pad_channels(src,
-                            plan.cin_pad if plan.cin_pad == d.N else 128)[None]
-        out = tg.tap_gemm(src, wk, plan.taps, ph.n_qh, ph.n_qw,
-                          cin_tile=plan.cin_tile, cout_tile=plan.cout_tile,
-                          out_dtype=dy.dtype, interpret=INTERPRET)
-        di = di.at[:, ph.r_h::d.S, ph.r_w::d.S, :].set(out[..., :d.C])
+    blocks = []
+    for spec in pp.phase_specs:
+        if spec is None:                                 # phase gets no taps
+            blocks.append(jnp.zeros((pp.t_max, d.N, d.C), wf.dtype))
+            continue
+        c_h, c_w, m_h, m_w = spec
+        wk = wf[:, :, c_h::S, c_w::S][:, :, :m_h, :m_w]
+        wk = wk.transpose(2, 3, 0, 1).reshape(m_h * m_w, d.N, d.C)
+        blocks.append(_pad_to(wk, pp.t_max, axis=0))
+    wk_stack = jnp.stack(blocks)                         # (S*S, T, N, C)
+    wk_stack = _pad_to(wk_stack, tile.cin_pad, axis=2)
+    wk_stack = _pad_to(wk_stack, tile.cout_pad, axis=3)
+    src = jnp.pad(_to_nhwc(dy),                          # (B, Ho+lo, Wo+lo, N)
+                  ((0, 0), (pp.g_lo_h, 0), (pp.g_lo_w, 0), (0, 0)))
+    src = _pad_to(src, tile.cin_pad)
+    out = tg.tap_gemm_phased(
+        src, wk_stack, pp.phase_taps, pp.n_qh, pp.n_qw,
+        cin_tile=tile.cin_tile, cout_tile=tile.cout_tile,
+        oh_tile=tile.oh_tile, ow_tile=tile.ow_tile,
+        out_dtype=dy.dtype, interpret=INTERPRET)         # (S*S, B, qh, qw, C)
+    di = _phase_unsplit(out[..., :d.C], S, d.H_i, d.W_i)
     return _from_nhwc(di)
 
 
@@ -261,17 +439,16 @@ def conv2d_input_grad(dy: jax.Array, w: jax.Array, d: ConvDims) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 def conv2d_weight_grad(x: jax.Array, dy: jax.Array, d: ConvDims) -> jax.Array:
-    from repro.kernels import tap_gemm as tg
     plan = weight_grad_plan(d)
     if not plan.fits:
         return phase_decomp.weight_grad_phase(x, dy, d)
     xp = zero_pad(x, d.P_h, d.P_w, d.p_h_hi, d.p_w_hi)
     src = _phase_split(_to_nhwc(xp), d.S)
-    src = _pad_channels(src, plan.cin_pad if plan.cin_pad == d.C else 128)
-    dyn = _pad_channels(_to_nhwc(dy),
-                        plan.cout_pad if plan.cout_pad == d.N else 128)
+    src = _pad_to(src, plan.cin_pad)
+    dyn = _pad_to(_to_nhwc(dy), plan.cout_pad)
     dw = tg.tap_wgrad(src, dyn, plan.taps, d.H_o, d.W_o,
                       cin_tile=plan.cin_tile, cout_tile=plan.cout_tile,
+                      oh_tile=plan.oh_tile, ow_tile=plan.ow_tile,
                       interpret=INTERPRET)
     dw = dw[:, :d.C, :d.N].reshape(d.K_h, d.K_w, d.C, d.N)
     return dw.transpose(3, 2, 0, 1).astype(x.dtype)

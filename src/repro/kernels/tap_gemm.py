@@ -1,4 +1,5 @@
-"""Shared Pallas kernel bodies: tap-loop GEMMs over phase-split operands.
+"""Shared Pallas kernel bodies: spatially-tiled tap-loop GEMMs over
+phase-split operands.
 
 This is the TPU-native datapath of BP-im2col.  The paper's RTL address
 generators turn a virtual zero-spaced lowered matrix into fetches of compact
@@ -10,19 +11,30 @@ dense multi-tap GEMM:
 
 Every load is a static (or grid-offset) VMEM slice -- no gathers, no
 zero-space bytes ever enter VMEM, and every MAC feeds the MXU with dense
-128-aligned tiles.  Three ops share the two kernel bodies:
+128-aligned tiles.  Three ops share the kernel bodies:
 
-  * forward conv         -> ``tap_gemm``    (src = phase-split padded input)
-  * input grad (transposed mode, per output phase)
-                         -> ``tap_gemm``    (src = padded compact dY)
+  * forward conv         -> ``tap_gemm``        (src = phase-split padded input)
+  * input grad (transposed mode, ALL output phases fused into one launch)
+                         -> ``tap_gemm_phased`` (src = padded compact dY)
   * weight grad (dilated mode)
-                         -> ``tap_wgrad``   (contraction over batch x space)
+                         -> ``tap_wgrad``       (contraction over batch x space)
 
-Grid conventions:
-  tap_gemm   grid = (B, cin_steps, cout_steps); cin is the contraction dim,
-             accumulated in an f32 VMEM scratch.
-  tap_wgrad  grid = (cin_steps, cout_steps, B); batch is the contraction dim,
-             accumulated directly into the f32 output block.
+Spatial tiling: every builder takes ``oh_tile``/``ow_tile`` and adds
+output-row/col block dimensions to the grid.  The source BlockSpec uses
+*element-offset* index maps (``pl.Unblocked``) so consecutive spatial tiles
+overlap by the tap halo ``(max du, max dv)`` -- the per-tile VMEM slice is
+``(tile + halo)`` rows/cols and a tap reads ``src[du : du+tile]`` inside it.
+That is what lets shapes whose full spatial plane exceeds VMEM still run on
+the Pallas path instead of falling back.
+
+Grid conventions (contraction dims INNERMOST so f32 scratch accumulates):
+  tap_gemm        grid = (B, n_th, n_tw, cout_steps, cin_steps)
+  tap_gemm_phased grid = (S*S, B, n_th, n_tw, cout_steps, cin_steps); the
+                  leading phase dim selects the per-phase weight block and
+                  tap table, nothing else -- one pallas_call per conv.
+  tap_wgrad       grid = (cin_steps, cout_steps, B, n_th, n_tw); batch and
+                  space are contraction dims, accumulated in an f32 VMEM
+                  scratch and flushed to the output block exactly once.
 
 All shapes entering ``pl.pallas_call`` are static; tile sizes are chosen by
 ``ops.py`` under an explicit VMEM budget.
@@ -39,54 +51,115 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
+def _cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def _pad_hw(x: jax.Array, h_axis: int, rows: int, cols: int) -> jax.Array:
+    """Zero-pad two adjacent spatial axes up to (rows, cols)."""
+    h, w = x.shape[h_axis], x.shape[h_axis + 1]
+    if h >= rows and w >= cols:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[h_axis] = (0, max(0, rows - h))
+    pads[h_axis + 1] = (0, max(0, cols - w))
+    return jnp.pad(x, pads)
+
+
+def _taps_halo(taps) -> tuple[int, int]:
+    if not taps:
+        return 0, 0
+    return max(t[-2] for t in taps), max(t[-1] for t in taps)
+
+
 # ---------------------------------------------------------------------------
 # Kernel bodies
 # ---------------------------------------------------------------------------
 
 def _tap_gemm_kernel(src_ref, w_ref, out_ref, acc_ref, *,
                      taps: tuple[tuple[int, int, int], ...],
-                     oh: int, ow: int, cin_steps: int):
-    """out[0, :, :, :] = sum_t src[p_t, 0, du_t:du_t+oh, dv_t:dv_t+ow, :] @ w[t].
-
-    Grid (b, cout_steps, cin_steps): the contraction dim (cin) is INNERMOST so
-    the f32 scratch accumulates correctly across steps.
-    """
-    cin_step = pl.program_id(2)
+                     th: int, tw: int, cin_steps: int):
+    """out tile = sum_t src[p_t, 0, du_t:du_t+th, dv_t:dv_t+tw, :] @ w[t]."""
+    cin_step = pl.program_id(4)
 
     @pl.when(cin_step == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     for t, (p, du, dv) in enumerate(taps):
-        xs = src_ref[p, 0, du:du + oh, dv:dv + ow, :]
-        xs = xs.reshape(oh * ow, xs.shape[-1])
+        xs = src_ref[p, 0, du:du + th, dv:dv + tw, :]
+        xs = xs.reshape(th * tw, xs.shape[-1])
         acc_ref[...] += jax.lax.dot(
             xs, w_ref[t], preferred_element_type=jnp.float32)
 
     @pl.when(cin_step == cin_steps - 1)
     def _flush():
         out_ref[...] = acc_ref[...].reshape(
-            1, oh, ow, out_ref.shape[-1]).astype(out_ref.dtype)
+            1, th, tw, out_ref.shape[-1]).astype(out_ref.dtype)
 
 
-def _tap_wgrad_kernel(src_ref, dy_ref, out_ref, *,
-                      taps: tuple[tuple[int, int, int], ...],
-                      oh: int, ow: int, b_steps: int):
-    """out[t, :, :] += src[p_t, 0, du:du+oh, dv:dv+ow, :].T @ dy[0, :, :, :]."""
-    b = pl.program_id(2)
+def _tap_gemm_phased_kernel(src_ref, w_ref, out_ref, acc_ref, *,
+                            phase_taps: tuple[tuple[tuple[int, int, int], ...],
+                                              ...],
+                            th: int, tw: int, cin_steps: int):
+    """Fused input-grad body: the leading grid dim is the output stride
+    phase; it selects which tap table runs and which weight block was
+    loaded.  Phases with an empty tap table write a zero tile (those rows
+    of dI receive no contribution)."""
+    phase = pl.program_id(0)
+    cin_step = pl.program_id(5)
 
-    @pl.when(b == 0)
+    @pl.when(cin_step == 0)
     def _init():
-        out_ref[...] = jnp.zeros_like(out_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    dyr = dy_ref[0].reshape(oh * ow, dy_ref.shape[-1])
+    for p, taps in enumerate(phase_taps):
+        if not taps:
+            continue
+
+        @pl.when(phase == p)
+        def _run(taps=taps):
+            for (j, du, dv) in taps:
+                xs = src_ref[0, du:du + th, dv:dv + tw, :]
+                xs = xs.reshape(th * tw, xs.shape[-1])
+                acc_ref[...] += jax.lax.dot(
+                    xs, w_ref[0, j], preferred_element_type=jnp.float32)
+
+    @pl.when(cin_step == cin_steps - 1)
+    def _flush():
+        out_ref[...] = acc_ref[...].reshape(
+            1, 1, th, tw, out_ref.shape[-1]).astype(out_ref.dtype)
+
+
+def _tap_wgrad_kernel(src_ref, dy_ref, out_ref, acc_ref, *,
+                      taps: tuple[tuple[int, int, int], ...],
+                      th: int, tw: int, contraction_steps: int):
+    """acc[t, :, :] += src[p_t, 0, du:du+th, dv:dv+tw, :].T @ dy tile.
+
+    Batch AND spatial tiles are contraction dims; partial sums live in the
+    f32 VMEM scratch and the output block is written exactly once, so it is
+    never round-tripped through HBM between contraction steps."""
+    b = pl.program_id(2)
+    r = pl.program_id(3)
+    c = pl.program_id(4)
+    step = (b * pl.num_programs(3) + r) * pl.num_programs(4) + c
+
+    @pl.when(step == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    dyr = dy_ref[0].reshape(th * tw, dy_ref.shape[-1])
     for t, (p, du, dv) in enumerate(taps):
-        xs = src_ref[p, 0, du:du + oh, dv:dv + ow, :]
-        xs = xs.reshape(oh * ow, xs.shape[-1])
-        # (CIN, oh*ow) @ (oh*ow, COUT) via dot_general contraction on dim 0.
-        out_ref[t, :, :] += jax.lax.dot_general(
+        xs = src_ref[p, 0, du:du + th, dv:dv + tw, :]
+        xs = xs.reshape(th * tw, xs.shape[-1])
+        # (CIN, th*tw) @ (th*tw, COUT) via dot_general contraction on dim 0.
+        acc_ref[t, :, :] += jax.lax.dot_general(
             xs, dyr, (((0,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32).astype(out_ref.dtype)
+            preferred_element_type=jnp.float32)
+
+    @pl.when(step == contraction_steps - 1)
+    def _flush():
+        out_ref[...] = acc_ref[...].astype(out_ref.dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -97,69 +170,157 @@ def tap_gemm(src: jax.Array, w: jax.Array,
              taps: Sequence[tuple[int, int, int]],
              oh: int, ow: int, *,
              cin_tile: int, cout_tile: int,
+             oh_tile: int | None = None, ow_tile: int | None = None,
              out_dtype=None, interpret: bool = True) -> jax.Array:
-    """Multi-tap GEMM.
+    """Spatially-tiled multi-tap GEMM.
 
     src : (P, B, Hs, Ws, CIN)   phase-split compact source
     w   : (T, CIN, COUT)        per-tap weight slices, T == len(taps)
     out : (B, oh, ow, COUT)
+
+    ``oh_tile``/``ow_tile`` block the output spatial plane; each source
+    block is the matching window plus the tap halo, fetched via an
+    element-offset (Unblocked) index map so consecutive blocks overlap.
     """
     p_, b_, hs, ws, cin = src.shape
     t_, cin2, cout = w.shape
     assert cin == cin2 and t_ == len(taps)
     assert cin % cin_tile == 0 and cout % cout_tile == 0
+    th = oh_tile or oh
+    tw = ow_tile or ow
+    n_th, n_tw = _cdiv(oh, th), _cdiv(ow, tw)
+    halo_h, halo_w = _taps_halo(taps)
+    src = _pad_hw(src, 2, n_th * th + halo_h, n_tw * tw + halo_w)
     cin_steps = cin // cin_tile
     cout_steps = cout // cout_tile
     out_dtype = out_dtype or src.dtype
 
     kernel = functools.partial(
-        _tap_gemm_kernel, taps=tuple(taps), oh=oh, ow=ow, cin_steps=cin_steps)
-    return pl.pallas_call(
+        _tap_gemm_kernel, taps=tuple(taps), th=th, tw=tw,
+        cin_steps=cin_steps)
+    out = pl.pallas_call(
         kernel,
-        grid=(b_, cout_steps, cin_steps),
+        grid=(b_, n_th, n_tw, cout_steps, cin_steps),
         in_specs=[
-            pl.BlockSpec((p_, 1, hs, ws, cin_tile),
-                         lambda b, co, ci: (0, b, 0, 0, ci)),
+            pl.BlockSpec((p_, 1, th + halo_h, tw + halo_w, cin_tile),
+                         lambda b, r, c, co, ci:
+                         (0, b, r * th, c * tw, ci * cin_tile),
+                         indexing_mode=pl.Unblocked()),
             pl.BlockSpec((t_, cin_tile, cout_tile),
-                         lambda b, co, ci: (0, ci, co)),
+                         lambda b, r, c, co, ci: (0, ci, co)),
         ],
-        out_specs=pl.BlockSpec((1, oh, ow, cout_tile),
-                               lambda b, co, ci: (b, 0, 0, co)),
-        out_shape=jax.ShapeDtypeStruct((b_, oh, ow, cout), out_dtype),
-        scratch_shapes=[pltpu.VMEM((oh * ow, cout_tile), jnp.float32)],
+        out_specs=pl.BlockSpec((1, th, tw, cout_tile),
+                               lambda b, r, c, co, ci: (b, r, c, co)),
+        out_shape=jax.ShapeDtypeStruct((b_, n_th * th, n_tw * tw, cout),
+                                       out_dtype),
+        scratch_shapes=[pltpu.VMEM((th * tw, cout_tile), jnp.float32)],
         interpret=interpret,
     )(src, w)
+    return out[:, :oh, :ow, :]
+
+
+def tap_gemm_phased(src: jax.Array, w: jax.Array,
+                    phase_taps: Sequence[Sequence[tuple[int, int, int]]],
+                    oh: int, ow: int, *,
+                    cin_tile: int, cout_tile: int,
+                    oh_tile: int | None = None, ow_tile: int | None = None,
+                    out_dtype=None, interpret: bool = True) -> jax.Array:
+    """All-phases input-grad tap GEMM in ONE pallas_call.
+
+    src : (B, Hs, Ws, CIN)      globally padded compact dY (shared by every
+                                phase -- tap offsets are pre-shifted so all
+                                phases read it at a uniform base)
+    w   : (PH, T, CIN, COUT)    per-phase stacked tap weights, zero-padded to
+                                the widest tap table T
+    out : (PH, B, oh, ow, COUT) phase-major planes, un-phase-split by the
+                                caller with a pure reshape/transpose
+
+    phase_taps[p] is a tuple of ``(j, du, dv)``: tap j of phase p reads the
+    source window at halo offset (du, dv).
+    """
+    b_, hs, ws, cin = src.shape
+    ph_, t_, cin2, cout = w.shape
+    assert cin == cin2 and ph_ == len(phase_taps)
+    assert all(j < t_ for taps in phase_taps for (j, _, _) in taps)
+    assert cin % cin_tile == 0 and cout % cout_tile == 0
+    th = oh_tile or oh
+    tw = ow_tile or ow
+    n_th, n_tw = _cdiv(oh, th), _cdiv(ow, tw)
+    halo_h = max((t[1] for taps in phase_taps for t in taps), default=0)
+    halo_w = max((t[2] for taps in phase_taps for t in taps), default=0)
+    src = _pad_hw(src, 1, n_th * th + halo_h, n_tw * tw + halo_w)
+    cin_steps = cin // cin_tile
+    cout_steps = cout // cout_tile
+    out_dtype = out_dtype or src.dtype
+
+    kernel = functools.partial(
+        _tap_gemm_phased_kernel,
+        phase_taps=tuple(tuple(taps) for taps in phase_taps),
+        th=th, tw=tw, cin_steps=cin_steps)
+    out = pl.pallas_call(
+        kernel,
+        grid=(ph_, b_, n_th, n_tw, cout_steps, cin_steps),
+        in_specs=[
+            pl.BlockSpec((1, th + halo_h, tw + halo_w, cin_tile),
+                         lambda p, b, r, c, co, ci:
+                         (b, r * th, c * tw, ci * cin_tile),
+                         indexing_mode=pl.Unblocked()),
+            pl.BlockSpec((1, t_, cin_tile, cout_tile),
+                         lambda p, b, r, c, co, ci: (p, 0, ci, co)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, th, tw, cout_tile),
+                               lambda p, b, r, c, co, ci: (p, b, r, c, co)),
+        out_shape=jax.ShapeDtypeStruct(
+            (ph_, b_, n_th * th, n_tw * tw, cout), out_dtype),
+        scratch_shapes=[pltpu.VMEM((th * tw, cout_tile), jnp.float32)],
+        interpret=interpret,
+    )(src, w)
+    return out[:, :, :oh, :ow, :]
 
 
 def tap_wgrad(src: jax.Array, dy: jax.Array,
               taps: Sequence[tuple[int, int, int]],
               oh: int, ow: int, *,
               cin_tile: int, cout_tile: int,
+              oh_tile: int | None = None, ow_tile: int | None = None,
               interpret: bool = True) -> jax.Array:
     """Weight gradient: out (T, CIN, COUT) summed over batch and space.
 
     src : (P, B, Hs, Ws, CIN)   phase-split padded input
     dy  : (B, oh, ow, COUT)     compact output loss
+
+    Batch and spatial tiles are contraction grid dims; the partial sums
+    accumulate in an f32 VMEM scratch (never through HBM).
     """
     p_, b_, hs, ws, cin = src.shape
     b2, oh2, ow2, cout = dy.shape
     assert b2 == b_ and oh2 == oh and ow2 == ow
     assert cin % cin_tile == 0 and cout % cout_tile == 0
     t_ = len(taps)
+    th = oh_tile or oh
+    tw = ow_tile or ow
+    n_th, n_tw = _cdiv(oh, th), _cdiv(ow, tw)
+    halo_h, halo_w = _taps_halo(taps)
+    src = _pad_hw(src, 2, n_th * th + halo_h, n_tw * tw + halo_w)
+    dy = _pad_hw(dy, 1, n_th * th, n_tw * tw)   # zero rows add nothing
 
     kernel = functools.partial(
-        _tap_wgrad_kernel, taps=tuple(taps), oh=oh, ow=ow, b_steps=b_)
+        _tap_wgrad_kernel, taps=tuple(taps), th=th, tw=tw,
+        contraction_steps=b_ * n_th * n_tw)
     return pl.pallas_call(
         kernel,
-        grid=(cin // cin_tile, cout // cout_tile, b_),
+        grid=(cin // cin_tile, cout // cout_tile, b_, n_th, n_tw),
         in_specs=[
-            pl.BlockSpec((p_, 1, hs, ws, cin_tile),
-                         lambda ci, co, b: (0, b, 0, 0, ci)),
-            pl.BlockSpec((1, oh, ow, cout_tile),
-                         lambda ci, co, b: (b, 0, 0, co)),
+            pl.BlockSpec((p_, 1, th + halo_h, tw + halo_w, cin_tile),
+                         lambda ci, co, b, r, c:
+                         (0, b, r * th, c * tw, ci * cin_tile),
+                         indexing_mode=pl.Unblocked()),
+            pl.BlockSpec((1, th, tw, cout_tile),
+                         lambda ci, co, b, r, c: (b, r, c, co)),
         ],
         out_specs=pl.BlockSpec((t_, cin_tile, cout_tile),
-                               lambda ci, co, b: (0, ci, co)),
+                               lambda ci, co, b, r, c: (0, ci, co)),
         out_shape=jax.ShapeDtypeStruct((t_, cin, cout), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((t_, cin_tile, cout_tile), jnp.float32)],
         interpret=interpret,
     )(src, dy)
