@@ -1,26 +1,33 @@
 """Kernel microbenchmarks: wall-clock of the conv backprop engines and the
-Pallas kernels (interpret mode) on CPU, plus derived bytes-moved ratios and
-the static tile plans the Pallas lanes dispatch with.
+Pallas kernels (interpret mode) on CPU, plus derived bytes-moved ratios, the
+static tile plans the Pallas lanes dispatch with, and the per-pass engines
+the ``auto`` policy resolves to.
 
 Two levels are measured per case:
   * raw engine primitives (input_grad_*, weight_grad_*), as before;
-  * the end-to-end ``jax.grad`` path through the ``conv2d`` custom_vjp --
-    what a training step actually runs per mode (including ``pallas``).
+  * the end-to-end ``jax.grad`` path through the ``conv2d`` custom_vjp
+    under several ``EnginePolicy`` configurations -- the uniform engines,
+    ``auto``, and a mixed per-pass policy -- what a training step actually
+    runs.
 
 interpret-mode wall-clock is NOT TPU performance; the derived columns
-(bytes/elements moved, tile plans, fallback counts) are the
-hardware-independent quantities -- they are what future TPU runs
-(``INTERPRET = False``) compare against.
+(bytes/elements moved, tile plans, fallback counts, resolved policies) are
+the hardware-independent quantities -- they are what future TPU runs
+(``BPIM2COL_INTERPRET=0``) compare against.
 
     PYTHONPATH=src python benchmarks/bench_kernels.py [--tiny] \
-        [--json BENCH_kernels.json]
+        [--json BENCH_kernels.json] [--compare BENCH_kernels.json]
 
 ``--tiny`` runs one small shape with 1 rep (the CI smoke lane) and FAILS if
-any case falls off the Pallas path (tile-plan fallback counter > 0).
+any case falls off the Pallas path: a tile-plan fallback counter > 0 OR the
+``auto`` policy resolving any pass of any tiny case to a non-pallas engine.
 ``--json`` writes the machine-readable record: per-case wall-clock,
 bytes-moved ratios, tile plans (fits / spatial splits / VMEM footprint),
-and the planner's hit/fallback event counts.  The committed
-``BENCH_kernels.json`` is the perf baseline for later PRs.
+per-pass auto-policy resolution, and the planner's hit/fallback event
+counts.  The committed ``BENCH_kernels.json`` is the perf baseline.
+``--compare PATH`` re-runs the bench and exits non-zero if any shared
+timing column slowed down by more than ``--tolerance`` (default 15%) or
+any case that previously stayed on the Pallas path now falls back.
 """
 
 from __future__ import annotations
@@ -37,7 +44,8 @@ import numpy as np
 sys.path.insert(0, "src")
 
 from repro.core import bpim2col, im2col_ref, phase_decomp   # noqa: E402
-from repro.core.conv import conv2d                          # noqa: E402
+from repro.core.conv import conv2d, resolve_policy          # noqa: E402
+from repro.core.convspec import ConvSpec                    # noqa: E402
 from repro.core.im2col_ref import ConvDims                  # noqa: E402
 from repro.kernels import ops                               # noqa: E402
 
@@ -54,7 +62,17 @@ TINY_CASES = [
     ConvDims(B=1, C=4, H_i=12, W_i=12, N=8, K_h=3, K_w=3, S=2, P_h=1, P_w=1),
 ]
 
-GRAD_MODES = ("traditional", "bp_im2col", "bp_phase", "pallas")
+# End-to-end jax.grad policies: uniform engines (the old mode matrix), the
+# shape-dependent auto default, and a mixed per-pass policy exercising three
+# different engines in one backward.
+GRAD_POLICIES = (
+    ("traditional", "traditional"),
+    ("bp_im2col", "bp_im2col"),
+    ("bp_phase", "bp_phase"),
+    ("pallas", "pallas"),
+    ("auto", "auto"),
+    ("mixed", "fwd=lax,dgrad=pallas,wgrad=bp_phase"),
+)
 
 
 def _t(fn, *args, reps=5):
@@ -65,14 +83,19 @@ def _t(fn, *args, reps=5):
     return (time.perf_counter() - t0) / reps * 1e6
 
 
-def _grad_fn(d: ConvDims, mode: str):
-    """jit'd jax.grad through the conv2d custom_vjp for one mode."""
-    pad = ((d.P_h, d.p_h_hi), (d.P_w, d.p_w_hi))
+def _spec(d: ConvDims) -> ConvSpec:
+    return ConvSpec.make(stride=(d.s_h, d.s_w),
+                         padding=((d.P_h, d.p_h_hi), (d.P_w, d.p_w_hi)))
+
+
+def _grad_fn(d: ConvDims, policy: str):
+    """jit'd jax.grad through the conv2d custom_vjp for one policy."""
+    spec = _spec(d)
 
     @jax.jit
     def g(x, w):
         return jax.grad(
-            lambda a, b: jnp.sum(conv2d(a, b, d.S, pad, mode) ** 2),
+            lambda a, b: jnp.sum(conv2d(a, b, spec, policy) ** 2),
             argnums=(0, 1))(x, w)
     return g
 
@@ -93,7 +116,7 @@ def _bytes_moved(d: ConvDims) -> dict[str, float]:
     }
 
 
-def run(csv=True, cases=None, reps=5, grad_modes=GRAD_MODES):
+def run(csv=True, cases=None, reps=5, grad_policies=GRAD_POLICIES):
     rng = np.random.RandomState(0)
     rows = []
     for d in cases or CASES:
@@ -121,9 +144,9 @@ def run(csv=True, cases=None, reps=5, grad_modes=GRAD_MODES):
             "lowered_sparsity": round(bpim2col.lowered_sparsity_loss(d), 3),
         }
         # End-to-end jax.grad through the custom_vjp (the training path).
-        for mode in grad_modes:
-            row[f"grad_{mode}_us"] = round(_t(_grad_fn(d, mode), x, w,
-                                              reps=reps), 1)
+        for label, policy in grad_policies:
+            row[f"grad_{label}_us"] = round(_t(_grad_fn(d, policy), x, w,
+                                               reps=reps), 1)
         rows.append(row)
     if csv:
         print(",".join(rows[0].keys()))
@@ -132,12 +155,19 @@ def run(csv=True, cases=None, reps=5, grad_modes=GRAD_MODES):
     return rows
 
 
+def _auto_resolution(d: ConvDims) -> dict[str, str]:
+    """pass -> engine the auto policy resolves to for this geometry."""
+    return {p: v["engine"] for p, v in resolve_policy(d, "auto").items()}
+
+
 def _json_record(rows, cases) -> dict:
-    """Attach the static tile plans + traffic ratios to the timing rows."""
+    """Attach the static tile plans + traffic ratios + per-pass auto-policy
+    resolution to the timing rows."""
     cases = list(cases)
     record_cases = []
     for d, row in zip(cases, rows):
         plan = ops.plan_report(d)
+        auto = _auto_resolution(d)
         record_cases.append({
             "dims": {"B": d.B, "C": d.C, "H_i": d.H_i, "W_i": d.W_i,
                      "N": d.N, "K_h": d.K_h, "K_w": d.K_w, "S": d.S,
@@ -145,6 +175,8 @@ def _json_record(rows, cases) -> dict:
             "timings_us": row,
             "bytes_moved": _bytes_moved(d),
             "plan": plan,
+            "auto_policy": auto,
+            "auto_all_pallas": all(e == "pallas" for e in auto.values()),
             "fits": plan["pallas_path"],
             "input_grad_plan_none": not plan["input_grad"].get("fused",
                                                                False),
@@ -153,14 +185,67 @@ def _json_record(rows, cases) -> dict:
     fallbacks = sum(v for k, v in events.items() if k.endswith("_fallback"))
     return {
         "bench": "bench_kernels",
-        "schema": 1,
+        "schema": 2,
         "vmem_budget_bytes": ops.VMEM_BUDGET_BYTES,
         "interpret": ops.INTERPRET,
         "cases": record_cases,
         "plan_events": events,
         "tile_plan_fallbacks": fallbacks,
         "pallas_path_all_cases": all(c["fits"] for c in record_cases),
+        "auto_policy_all_pallas": all(c["auto_all_pallas"]
+                                      for c in record_cases),
     }
+
+
+def _case_key(case: dict) -> tuple:
+    return tuple(sorted(case["dims"].items()))
+
+
+def compare_records(record: dict, baseline: dict,
+                    tolerance: float = 0.15) -> list[str]:
+    """Regressions of ``record`` vs ``baseline``: any shared timing column
+    slower by > tolerance, any case leaving the Pallas path, and any pass
+    the auto policy used to place on pallas but no longer does."""
+    problems = []
+    base_cases = {_case_key(c): c for c in baseline.get("cases", [])}
+    new_keys = {_case_key(c) for c in record["cases"]}
+    for key, b in base_cases.items():
+        if key not in new_keys:
+            # Dropping a benchmarked shape must not pass vacuously.
+            problems.append(
+                f"baseline case {dict(b['dims'])} missing from the new "
+                "record (case dropped or dims changed?)")
+    for c in record["cases"]:
+        b = base_cases.get(_case_key(c))
+        if b is None:
+            continue                        # new case: nothing to compare
+        name = c["timings_us"].get("case", str(dict(c["dims"])))
+        for col, base_us in b["timings_us"].items():
+            if not col.endswith("_us") or not isinstance(base_us,
+                                                         (int, float)):
+                continue
+            now_us = c["timings_us"].get(col)
+            if now_us is None:
+                # A renamed/dropped column must not pass vacuously.
+                problems.append(
+                    f"{name} {col}: present in baseline but missing from "
+                    "the new record (renamed or dropped?)")
+                continue
+            if now_us > base_us * (1.0 + tolerance):
+                problems.append(
+                    f"{name} {col}: {now_us:.1f}us vs baseline "
+                    f"{base_us:.1f}us (+{now_us / base_us - 1.0:.0%} "
+                    f"> {tolerance:.0%})")
+        if b.get("fits") and not c.get("fits"):
+            problems.append(f"{name}: tile plan regressed off the Pallas "
+                            "path (fits: true -> false)")
+        base_auto = b.get("auto_policy", {})
+        for pass_name, engine in c.get("auto_policy", {}).items():
+            if base_auto.get(pass_name) == "pallas" and engine != "pallas":
+                problems.append(
+                    f"{name} {pass_name}: auto policy regressed "
+                    f"pallas -> {engine}")
+    return problems
 
 
 def main():
@@ -169,6 +254,12 @@ def main():
                     help="one small shape, 1 rep (CI smoke)")
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="write the machine-readable benchmark record")
+    ap.add_argument("--compare", metavar="PATH", default=None,
+                    help="exit non-zero on regression vs this baseline "
+                         "record (slowdown > --tolerance, or a case "
+                         "falling off the Pallas path)")
+    ap.add_argument("--tolerance", type=float, default=0.15,
+                    help="allowed per-column slowdown for --compare")
     args = ap.parse_args()
     cases = TINY_CASES if args.tiny else CASES
     reps = 1 if args.tiny else 5
@@ -185,14 +276,30 @@ def main():
         print(f"wrote {args.json}", file=sys.stderr)
     if args.tiny:
         # CI gate (with or without --json): a tiny shape falling off the
-        # Pallas path is a planner regression, not a capacity problem.
+        # Pallas path -- by tile-plan fallback OR by the auto policy
+        # resolving any pass elsewhere -- is a planner/resolver regression,
+        # not a capacity problem.
         if record["tile_plan_fallbacks"] > 0 or \
-                not record["pallas_path_all_cases"]:
+                not record["pallas_path_all_cases"] or \
+                not record["auto_policy_all_pallas"]:
             print(f"FAIL: tile-plan fallbacks="
                   f"{record['tile_plan_fallbacks']}, "
                   f"pallas_path_all_cases="
-                  f"{record['pallas_path_all_cases']}", file=sys.stderr)
+                  f"{record['pallas_path_all_cases']}, "
+                  f"auto_policy_all_pallas="
+                  f"{record['auto_policy_all_pallas']}", file=sys.stderr)
             raise SystemExit(1)
+    if args.compare:
+        with open(args.compare) as f:
+            baseline = json.load(f)
+        problems = compare_records(record, baseline, args.tolerance)
+        if problems:
+            print("PERF REGRESSION vs " + args.compare, file=sys.stderr)
+            for p in problems:
+                print("  " + p, file=sys.stderr)
+            raise SystemExit(1)
+        print(f"no regression vs {args.compare} "
+              f"(tolerance {args.tolerance:.0%})", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -1,22 +1,28 @@
-"""Train a strided CNN classifier with a selectable conv-backprop engine --
-the paper's training scenario, end-to-end.
+"""Train a strided CNN classifier with a selectable conv-backprop engine
+policy -- the paper's training scenario, end-to-end.
 
-    PYTHONPATH=src python examples/train_cnn_bp.py --mode bp_phase --steps 200
+    PYTHONPATH=src python examples/train_cnn_bp.py --policy bp_phase
+    PYTHONPATH=src python examples/train_cnn_bp.py \
+        --policy fwd=lax,dgrad=pallas,wgrad=bp_phase --steps 200
 
-Modes: lax | traditional | bp_im2col | bp_phase | pallas.  All reach the
-same losses (engines are exact); wall-clock differences on CPU echo the
-paper's reorganization-elimination claim (traditional pays for the
-zero-space copies; see benchmarks/bench_kernels.py for controlled numbers).
+Policies: a uniform engine name (lax | traditional | bp_im2col | bp_phase |
+pallas), "auto" (per-pass shape-dependent selection), or an explicit
+per-pass string fwd=...,dgrad=...,wgrad=...  All reach the same losses
+(engines are exact); wall-clock differences on CPU echo the paper's
+reorganization-elimination claim (traditional pays for the zero-space
+copies; see benchmarks/bench_kernels.py for controlled numbers).
 
 The model goes through ``repro.models.layers`` conv layers, so ``jax.grad``
-dispatches every conv backward through the engine's ``custom_vjp`` -- the
-same wiring the full training stack (``repro.train.train_step``) uses.  The
-second conv is depthwise (``groups=C``) to exercise the grouped datapath.
+dispatches every conv backward through the policy's per-pass engines via
+the ``custom_vjp`` -- the same wiring the full training stack
+(``repro.train.train_step``) uses.  The second conv is depthwise
+(``groups=C``) to exercise the grouped datapath.
 """
 
 import argparse
 import sys
 import time
+import warnings
 
 sys.path.insert(0, "src")
 
@@ -27,14 +33,16 @@ import numpy as np
 from repro.models import layers as L
 
 
-def make_model(mode):
+def make_model(policy):
     def forward(params, x):
-        h = L.conv2d_apply(params["c1"], x, stride=2, padding=1, mode=mode)
+        h = L.conv2d_apply(params["c1"], x, stride=2, padding=1,
+                           policy=policy)
         h = jax.nn.relu(h)                                # 16x16 -> 8x8
-        h = L.conv2d_apply(params["dw"], h, stride=1, padding=1, mode=mode,
-                           groups=16)                     # depthwise 8x8
+        h = L.conv2d_apply(params["dw"], h, stride=1, padding=1,
+                           policy=policy, groups=16)      # depthwise 8x8
         h = jax.nn.relu(h)
-        h = L.conv2d_apply(params["c2"], h, stride=2, padding=1, mode=mode)
+        h = L.conv2d_apply(params["c2"], h, stride=2, padding=1,
+                           policy=policy)
         h = jax.nn.relu(h)                                # 8x8 -> 4x4
         h = h.mean((2, 3))                                # GAP
         return h @ params["head"]
@@ -71,17 +79,28 @@ def synthetic_task(rng, n, classes=4):
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--mode", default="bp_phase",
+    ap.add_argument("--policy", default=None,
+                    help="engine policy: uniform name, 'auto', or "
+                         "fwd=...,dgrad=...,wgrad=... (default bp_phase)")
+    ap.add_argument("--mode", default=None,
                     choices=["lax", "traditional", "bp_im2col", "bp_phase",
-                             "pallas"])
+                             "pallas"],
+                    help="DEPRECATED: uniform spelling of --policy")
     ap.add_argument("--steps", type=int, default=200)
     ap.add_argument("--batch", type=int, default=32)
     ap.add_argument("--lr", type=float, default=0.05)
     ap.add_argument("--acc-floor", type=float, default=0.9)
     args = ap.parse_args()
+    if args.mode is not None:
+        warnings.warn("--mode is deprecated; use --policy",
+                      DeprecationWarning)
+        if args.policy is not None:
+            raise SystemExit("pass either --policy or the deprecated "
+                             "--mode, not both")
+    policy = args.policy or args.mode or "bp_phase"
 
     rng = np.random.RandomState(0)
-    _, loss_fn = make_model(args.mode)
+    _, loss_fn = make_model(policy)
     params = init_params()
     grad_fn = jax.jit(jax.value_and_grad(loss_fn))
     t0 = time.perf_counter()
@@ -90,12 +109,12 @@ def main():
         loss, g = grad_fn(params, x, y)
         params = jax.tree.map(lambda p, gg: p - args.lr * gg, params, g)
         if step % 20 == 0 or step == args.steps - 1:
-            print(f"[{args.mode}] step={step:4d} loss={float(loss):.4f}")
+            print(f"[{policy}] step={step:4d} loss={float(loss):.4f}")
     dt = time.perf_counter() - t0
     xe, ye = synthetic_task(np.random.RandomState(1), 256)
-    fwd, _ = make_model(args.mode)
+    fwd, _ = make_model(policy)
     acc = float((jnp.argmax(fwd(params, xe), -1) == ye).mean())
-    print(f"[{args.mode}] done in {dt:.1f}s  eval_acc={acc:.3f}")
+    print(f"[{policy}] done in {dt:.1f}s  eval_acc={acc:.3f}")
     assert acc > args.acc_floor, "training failed to learn the synthetic task"
 
 

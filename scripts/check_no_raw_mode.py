@@ -1,0 +1,69 @@
+#!/usr/bin/env python
+"""Grep-lint: no internal call site may pass a raw conv ``mode=`` string.
+
+The structured surface is ``conv2d(x, w, ConvSpec, policy=...)``;
+``mode="bp_phase"``-style strings are the deprecated shim and live ONLY in
+``src/repro/core/conv.py`` (the shim itself) and the tests that cover it.
+This script fails CI when a raw mode string (or a ``mode=cfg.conv_mode``
+plumbing) sneaks back into src/, examples/, benchmarks/ or scripts/.
+
+    python scripts/check_no_raw_mode.py [root]
+"""
+
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ENGINE = r"(?:lax|traditional|bp_im2col|bp_phase|pallas|auto)"
+PATTERNS = [
+    # mode="bp_phase" / mode='pallas' -- the deprecated stringly kwarg
+    re.compile(rf"""\bmode\s*=\s*["']{ENGINE}["']"""),
+    # mode=cfg.conv_mode / mode=args.conv_mode -- deprecated plumbing
+    re.compile(r"\bmode\s*=\s*(?:cfg|args|self)\.conv_mode\b"),
+]
+
+SCAN_DIRS = ("src", "examples", "benchmarks", "scripts")
+
+# The shim itself (and this linter) are the only places the deprecated
+# spelling may appear.
+ALLOWED = {pathlib.PurePosixPath("src/repro/core/conv.py"),
+           pathlib.PurePosixPath("scripts/check_no_raw_mode.py")}
+
+
+def scan(root: pathlib.Path) -> list[str]:
+    hits = []
+    for d in SCAN_DIRS:
+        base = root / d
+        if not base.is_dir():
+            continue
+        for path in sorted(base.rglob("*.py")):
+            rel = pathlib.PurePosixPath(path.relative_to(root).as_posix())
+            if rel in ALLOWED:
+                continue
+            for lineno, line in enumerate(
+                    path.read_text(encoding="utf-8").splitlines(), 1):
+                for pat in PATTERNS:
+                    if pat.search(line):
+                        hits.append(f"{rel}:{lineno}: {line.strip()}")
+    return hits
+
+
+def main(argv: list[str]) -> int:
+    root = pathlib.Path(argv[1]) if len(argv) > 1 else \
+        pathlib.Path(__file__).resolve().parent.parent
+    hits = scan(root)
+    if hits:
+        print("raw conv mode= strings outside the compat shim "
+              "(use ConvSpec/EnginePolicy: policy=...):", file=sys.stderr)
+        for h in hits:
+            print("  " + h, file=sys.stderr)
+        return 1
+    print(f"ok: no raw conv mode= strings outside the shim "
+          f"({', '.join(SCAN_DIRS)})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv))

@@ -9,6 +9,7 @@ while widths shrink to CPU scale.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Optional
 
 import jax.numpy as jnp
@@ -62,11 +63,30 @@ class ArchConfig:
     act_dtype: str = "float32"
     norm_eps: float = 1e-6
     tie_embeddings: bool = False
-    conv_mode: str = "bp_phase"       # backprop engine for convs (the paper)
+    # Per-pass conv backprop engine selection (the paper): an EnginePolicy
+    # string -- "auto", a uniform engine name, or
+    # "fwd=...,dgrad=...,wgrad=..." (repro.core.EnginePolicy.parse).
+    conv_policy: str = "auto"
+    # DEPRECATED: the old uniform engine knob.  When set it wins over
+    # conv_policy (mapped to a uniform EnginePolicy) with a warning.
+    conv_mode: Optional[str] = None
     attn_impl: str = "xla"            # xla | flash (Pallas kernel)
     remat: str = "block"              # none | block
 
     # ------------------------------------------------------------------
+    @property
+    def conv_engine_policy(self) -> str:
+        """The effective conv EnginePolicy string: ``conv_mode`` (deprecated,
+        uniform) when set, else ``conv_policy``.  Model code reads this."""
+        if self.conv_mode is not None:
+            warnings.warn(
+                "ArchConfig.conv_mode is deprecated; set conv_policy "
+                "(e.g. conv_policy=\"fwd=pallas,dgrad=auto,wgrad=bp_phase\" "
+                "or a uniform engine name) instead",
+                DeprecationWarning, stacklevel=2)
+            return self.conv_mode
+        return self.conv_policy
+
     @property
     def dtype(self):
         return jnp.dtype(self.param_dtype)

@@ -167,6 +167,9 @@ def gather_lowered_A_grad(dy: jax.Array, d: ConvDims) -> jax.Array:
 def input_grad_implicit(dy: jax.Array, w: jax.Array, d: ConvDims) -> jax.Array:
     """Loss calculation via BP-im2col: dI = B_lowered^T-structured GEMM with
     Tr(rot180(W)); only compact dy is ever read."""
+    assert d.s_h == d.s_w, (
+        "Algorithm 1 address mapping assumes the paper's square stride; "
+        "asymmetric strides are capability-gated to another engine")
     bm = gather_lowered_B_loss(dy, d)                 # (N*Kh*Kw, B*Hi*Wi)
     wt = rot180(w).transpose(1, 0, 2, 3)              # (C, N, Kh, Kw)
     wm = wt.reshape(d.C, d.N * d.K_h * d.K_w)         # (C, N*Kh*Kw)
@@ -180,6 +183,9 @@ def weight_grad_implicit(x: jax.Array, dy: jax.Array, d: ConvDims) -> jax.Array:
     Algorithm 2 (compact dy only); matrix B is the im2col of the padded input
     (same as inference -- no zero-space beyond ordinary padding)."""
     from repro.core.im2col_ref import im2col, zero_pad
+    assert d.s_h == d.s_w, (
+        "Algorithm 2 address mapping assumes the paper's square stride; "
+        "asymmetric strides are capability-gated to another engine")
     a = gather_lowered_A_grad(dy, d)                  # (N, B*Ho''*Wo'')
     xe = zero_pad(x, d.P_h, d.P_w,
                   d.p_h_hi, d.p_w_hi).transpose(1, 0, 2, 3)

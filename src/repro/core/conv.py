@@ -1,90 +1,97 @@
-"""Convolution with a selectable backpropagation engine.
+"""Convolution with structured geometry and per-pass backprop engines.
 
-``conv2d(x, w, stride, padding, mode=...)`` computes the same forward result
-for every mode; the mode chooses how the backward pass is realized:
+The public surface is built from two objects (``repro.core.convspec``):
+
+  * ``ConvSpec`` -- the layer geometry: per-axis stride, per-axis dilation,
+    asymmetric padding, feature groups, activation layout;
+  * ``EnginePolicy`` -- WHICH engine realizes each of the three lowered
+    GEMMs (``forward`` / ``input_grad`` / ``weight_grad``), independently.
+
+    y = conv2d(x, w, ConvSpec.make(stride=(2, 2), padding=1),
+               EnginePolicy.parse("fwd=pallas,dgrad=auto,wgrad=bp_phase"))
+
+Registered engines (``ENGINES``; extend with :func:`register_engine`):
 
   * ``"lax"``         -- XLA's native conv + autodiff (control / ground truth)
   * ``"traditional"`` -- explicit im2col with zero-space materialization (the
                          paper's baseline accelerator behaviour)
   * ``"bp_im2col"``   -- the paper's implicit algorithm: Algorithms 1 & 2
                          address mapping + gather (literal reproduction)
-  * ``"bp_phase"``    -- TPU-native stride-phase decomposition (same zero
-                         elimination, dense MXU form; the production path)
-  * ``"pallas"``      -- Pallas kernels (phase-decomposed GEMMs with explicit
-                         VMEM BlockSpecs; interpret=True on CPU)
+  * ``"bp_phase"``    -- stride-phase decomposition (same zero elimination,
+                         dense MXU form; supports asymmetric strides)
+  * ``"pallas"``      -- Pallas tap-GEMM kernels (explicit VMEM BlockSpecs)
+  * ``"auto"``        -- not an engine: the resolver picks per pass.  It
+                         consults the spec's geometry and the Pallas tile
+                         planner (``repro.kernels.ops``): stride-1 layers
+                         stay on the dense native path (no zero-space to
+                         eliminate), strided layers take the Pallas tap-GEMM
+                         path whenever the tile plan fits the VMEM budget,
+                         and every fallback records WHY
+                         (:func:`policy_decisions`).
 
-``conv2d`` carries a ``jax.custom_vjp``: the forward runs the selected
-engine and the backward dispatches the input gradient (transposed mode,
-Algorithm 1 / phase decomposition) and the weight gradient (dilated mode,
-Algorithm 2) through the same ``ENGINES`` registry, so ``jax.grad``, ``jit``
-and ``vmap`` over any model transparently exercise the paper's datapath.
-All static knobs (stride/padding/mode/groups) are nondiff arguments so jit
-specializes per configuration; every mode is validated against ``jax.grad``
-of the lax reference in tests/test_conv_modes.py.
+Engines that cannot serve a spec (asymmetric stride on the square-stride
+Algorithm 1/2 gathers or the Pallas planners; geometry outside the paper's
+``P <= K - 1`` constraints on any implicit engine; a tile plan over budget
+on ``pallas``) gracefully resolve to the strongest capable engine -- the
+substitution is recorded, never silent: :func:`dispatch_events` counts the
+engine *actually used* per pass and :func:`policy_decisions` keeps the
+per-decision reasons.  Dilation is supported for every engine by a
+dispatch-level lowering: the kernel is zero-dilated to its effective extent
+(``K_eff = (K-1)*D + 1``) before entering an engine, and the weight
+gradient's real taps are sliced back out -- exact, because the inserted
+kernel zeros contribute nothing to ``y``/``dI`` and their ``dW`` entries
+are discarded.
 
-Supported scenarios beyond the paper's square case:
+``conv2d`` carries a ``jax.custom_vjp`` whose nondiff arguments are the
+``(ConvSpec, EnginePolicy)`` pair, so ``jax.grad``, ``jit`` and ``vmap``
+over any model transparently exercise a *mixed* datapath -- e.g. native
+forward, Pallas input gradient, phase-decomposed weight gradient in one
+training step.  :func:`conv_policy` is a context-manager override that
+swaps the policy for every conv in scope (it beats per-call policies)
+without rebuilding the model; it applies at trace time, so wrap the
+``jit``/``grad`` call, not the cached executable.
 
-  * asymmetric padding: ``padding=((top, bottom), (left, right))`` -- causal
-    temporal convs are expressed as left-only pads;
-  * grouped and depthwise conv via ``groups=`` (weights ``(N, C/g, Kh, Kw)``),
-    lowered as a vmap of the selected engine over the group dim so the
-    BP-im2col datapath is exercised per group;
-  * ``conv1d`` / ``conv1d_causal`` / ``depthwise_causal_conv1d`` wrappers
-    (used by the Mamba2 / RecurrentGemma temporal convolutions) which lower
-    1-D convs onto the same engines as (H=1) 2-D convs.
+Backward compatibility: the pre-ConvSpec surface
+``conv2d(x, w, stride:int, padding, mode="bp_phase", groups)`` still works.
+``mode=`` (kwarg or legacy 5th positional) maps to
+``EnginePolicy.uniform(mode)`` and emits a ``DeprecationWarning``; loose
+``stride=/padding=/dilation=/groups=`` kwargs are non-deprecated sugar that
+builds the ``ConvSpec`` internally.  Passing a bare engine name as
+``policy=`` is the blessed spelling of a uniform policy.
 """
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
+import warnings
 from functools import partial
-from typing import Callable, Literal
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import bpim2col, im2col_ref, phase_decomp
-from repro.core.im2col_ref import ConvDims
+from repro.core.convspec import AUTO, ConvSpec, EnginePolicy
+from repro.core.im2col_ref import ConvDims, zero_insert
 
-Mode = Literal["lax", "traditional", "bp_im2col", "bp_phase", "pallas"]
-
-
-def _norm_padding(padding) -> tuple[tuple[int, int], tuple[int, int]]:
-    """int | (ph, pw) | ((ph_lo, ph_hi), (pw_lo, pw_hi)) -> nested tuples."""
-    if isinstance(padding, int):
-        return (padding, padding), (padding, padding)
-    ph, pw = padding
-    if isinstance(ph, int):
-        ph = (ph, ph)
-    if isinstance(pw, int):
-        pw = (pw, pw)
-    return (int(ph[0]), int(ph[1])), (int(pw[0]), int(pw[1]))
-
-
-def make_dims(x_shape, w_shape, stride: int, padding,
-              groups: int = 1) -> ConvDims:
-    """Per-group ConvDims: C and N are the per-group channel counts."""
-    b, c, h, w = x_shape
-    n, cg, kh, kw = w_shape
-    assert c == cg * groups, (
-        f"channel mismatch: input C={c}, weight C/g={cg}, groups={groups}")
-    assert n % groups == 0, f"N={n} not divisible by groups={groups}"
-    (ph_lo, ph_hi), (pw_lo, pw_hi) = _norm_padding(padding)
-    return ConvDims(B=b, C=cg, H_i=h, W_i=w, N=n // groups, K_h=kh, K_w=kw,
-                    S=stride, P_h=ph_lo, P_w=pw_lo,
-                    P_h_hi=ph_hi, P_w_hi=pw_hi)
+Mode = str   # legacy alias: engine names are plain strings now
 
 
 # ---------------------------------------------------------------------------
-# Mode registry: forward / input-grad / weight-grad per engine
+# Engine registry: forward / input-grad / weight-grad + capabilities
 # ---------------------------------------------------------------------------
 
 @dataclasses.dataclass(frozen=True)
 class Engine:
-    """The three lowered GEMMs of one conv layer under one engine."""
+    """The three lowered GEMMs of one conv layer under one engine, plus the
+    static capabilities the policy resolver gates on."""
+    name: str
     forward: Callable      # (x, w, d) -> y
     input_grad: Callable   # (dy, w, d) -> dx   (transposed mode, Algorithm 1)
     weight_grad: Callable  # (x, dy, d) -> dw   (dilated mode, Algorithm 2)
+    asym_stride: bool = False     # supports d.s_h != d.s_w
+    paper_geometry: bool = True   # requires ConvDims.validate() (P <= K-1 ..)
 
 
 def _pallas_forward(x, w, d):
@@ -104,7 +111,7 @@ def _pallas_weight_grad(x, dy, d):
 
 def _lax_input_grad(dy, w, d):
     # Anchor: autodiff of the native conv (never dispatched through the
-    # implicit path; used by mode="lax" and as the registry's control).
+    # implicit path; used by engine "lax" and as the registry's control).
     x_shape = (d.B, d.C, d.H_i, d.W_i)
     _, vjp = jax.vjp(
         lambda x_: im2col_ref.conv2d_lax(x_, w, d),
@@ -120,30 +127,242 @@ def _lax_weight_grad(x, dy, d):
     return vjp(dy)[0]
 
 
-ENGINES: dict[str, Engine] = {
-    "lax": Engine(im2col_ref.conv2d_lax, _lax_input_grad, _lax_weight_grad),
-    "traditional": Engine(im2col_ref.conv2d_forward_explicit,
-                          im2col_ref.input_grad_explicit,
-                          im2col_ref.weight_grad_explicit),
-    "bp_im2col": Engine(im2col_ref.conv2d_forward_explicit,
-                        bpim2col.input_grad_implicit,
-                        bpim2col.weight_grad_implicit),
-    "bp_phase": Engine(im2col_ref.conv2d_lax,
-                       phase_decomp.input_grad_phase,
-                       phase_decomp.weight_grad_phase),
-    "pallas": Engine(_pallas_forward, _pallas_input_grad,
-                     _pallas_weight_grad),
-}
+ENGINES: dict[str, Engine] = {}
 
+
+def register_engine(name: str, forward: Callable, input_grad: Callable,
+                    weight_grad: Callable, *, asym_stride: bool = False,
+                    paper_geometry: bool = True,
+                    overwrite: bool = False) -> Engine:
+    """Register a conv engine under ``name`` for use in any ``EnginePolicy``.
+
+    The three callables take ``(x, w, d)`` / ``(dy, w, d)`` / ``(x, dy, d)``
+    with ``d`` the per-group :class:`ConvDims` (dilation already folded into
+    the kernel extent).  ``asym_stride`` declares support for
+    ``d.s_h != d.s_w``; ``paper_geometry`` declares that the engine needs
+    ``ConvDims.validate()`` to hold (the resolver falls back otherwise).
+    Re-registering an existing name requires ``overwrite=True``.
+    """
+    if name == AUTO or not name:
+        raise ValueError(f"invalid engine name {name!r}")
+    if name in ENGINES and not overwrite:
+        raise ValueError(f"engine {name!r} is already registered "
+                         "(pass overwrite=True to replace it)")
+    eng = Engine(name, forward, input_grad, weight_grad,
+                 asym_stride=asym_stride, paper_geometry=paper_geometry)
+    ENGINES[name] = eng
+    return eng
+
+
+register_engine("lax", im2col_ref.conv2d_lax, _lax_input_grad,
+                _lax_weight_grad, asym_stride=True, paper_geometry=False)
+register_engine("traditional", im2col_ref.conv2d_forward_explicit,
+                im2col_ref.input_grad_explicit,
+                im2col_ref.weight_grad_explicit, asym_stride=True)
+register_engine("bp_im2col", im2col_ref.conv2d_forward_explicit,
+                bpim2col.input_grad_implicit,
+                bpim2col.weight_grad_implicit)
+register_engine("bp_phase", im2col_ref.conv2d_lax,
+                phase_decomp.input_grad_phase,
+                phase_decomp.weight_grad_phase, asym_stride=True)
+register_engine("pallas", _pallas_forward, _pallas_input_grad,
+                _pallas_weight_grad)
+
+#: the built-in engine names (legacy export; registry may grow beyond it).
 MODES: tuple[str, ...] = tuple(ENGINES)
 
 
-def _engine(mode: Mode) -> Engine:
+def _engine(name: str) -> Engine:
     try:
-        return ENGINES[mode]
+        return ENGINES[name]
     except KeyError:
-        raise ValueError(f"unknown conv mode {mode!r}; "
-                         f"choose from {MODES}") from None
+        raise ValueError(
+            f"unknown conv engine {name!r}; choose from "
+            f"{tuple(ENGINES)} or 'auto'") from None
+
+
+# ---------------------------------------------------------------------------
+# Geometry: ConvSpec + shapes -> per-group ConvDims (dilation folded in)
+# ---------------------------------------------------------------------------
+
+def make_dims(x_shape, w_shape, stride=1, padding=0,
+              groups: int = 1, dilation=1) -> ConvDims:
+    """Per-group ConvDims: C and N are the per-group channel counts.
+
+    ``stride``/``dilation`` accept an int or a per-axis pair; dilation is
+    folded into the kernel extent (``K_eff``), matching the dispatch-level
+    lowering the engines see.
+    """
+    return spec_dims(x_shape, w_shape,
+                     ConvSpec.make(stride=stride, padding=padding,
+                                   dilation=dilation, groups=groups))
+
+
+def spec_dims(x_shape, w_shape, spec: ConvSpec) -> ConvDims:
+    """The per-group ``ConvDims`` a ``(x, w, spec)`` triple dispatches with."""
+    b, c, h, w = x_shape
+    n, cg, kh, kw = w_shape
+    g = spec.groups
+    assert c == cg * g, (
+        f"channel mismatch: input C={c}, weight C/g={cg}, groups={g}")
+    assert n % g == 0, f"N={n} not divisible by groups={g}"
+    keff_h, keff_w = spec.effective_kernel(kh, kw)
+    (ph_lo, ph_hi), (pw_lo, pw_hi) = spec.padding
+    d = ConvDims(B=b, C=cg, H_i=h, W_i=w, N=n // g,
+                 K_h=keff_h, K_w=keff_w,
+                 S=spec.s_h, S_w=(-1 if spec.s_w == spec.s_h else spec.s_w),
+                 P_h=ph_lo, P_w=pw_lo, P_h_hi=ph_hi, P_w_hi=pw_hi)
+    if d.H_o < 1 or d.W_o < 1:
+        # A mis-sized layer, not a capability question: fail at trace time
+        # for EVERY engine rather than training on empty activations.
+        raise ValueError(
+            f"conv output plane is empty ({d.H_o}x{d.W_o}): input "
+            f"{h}x{w}, effective kernel {keff_h}x{keff_w} "
+            f"(dilation {spec.dilation}), stride {spec.stride}, "
+            f"padding {spec.padding}")
+    return d
+
+
+def _dilate_weight(w: jax.Array, spec: ConvSpec) -> jax.Array:
+    """Materialize the dilated kernel (zeros between taps) so every engine
+    sees an ordinary dense conv of extent K_eff."""
+    if not spec.has_dilation:
+        return w
+    return zero_insert(w, (spec.d_h, spec.d_w))
+
+
+def _undilate_dweight(dw_eff: jax.Array, spec: ConvSpec) -> jax.Array:
+    """Slice the real taps back out of the effective-kernel weight grad."""
+    if not spec.has_dilation:
+        return dw_eff
+    return dw_eff[..., ::spec.d_h, ::spec.d_w]
+
+
+# ---------------------------------------------------------------------------
+# Policy resolution: requested engine -> engine actually dispatched
+# ---------------------------------------------------------------------------
+
+#: (pass, engine-actually-used) trace-time counters, key "pass:engine".
+DISPATCH_EVENTS: dict[str, int] = {}
+
+#: per-decision log: requested engine, engine used, and why (bounded).
+POLICY_DECISIONS: list[dict] = []
+_MAX_DECISIONS = 512
+
+
+def dispatch_events() -> dict[str, int]:
+    """Counts of the engine ACTUALLY used per pass (``"input_grad:pallas"``
+    -> n), recorded at trace time inside the custom_vjp.  A jit cache hit
+    does not re-trace and therefore does not re-count."""
+    return dict(DISPATCH_EVENTS)
+
+
+def policy_decisions() -> list[dict]:
+    return list(POLICY_DECISIONS)
+
+
+def reset_dispatch_events() -> None:
+    DISPATCH_EVENTS.clear()
+    POLICY_DECISIONS.clear()
+
+
+def _paper_geometry_gap(d: ConvDims) -> str | None:
+    """The ``ConvDims.validate()`` conditions, evaluated explicitly: the
+    resolver ROUTES on this (not just error messaging), so it must not
+    evaporate under ``python -O`` the way a bare assert would."""
+    if d.H_o < 1 or d.W_o < 1:
+        return f"empty output plane ({d.H_o}x{d.W_o})"
+    if d.K_h - 1 - d.P_h < 0 or d.K_w - 1 - d.P_w < 0:
+        return "transposed-conv padding K-1-P is negative"
+    if d.K_h - 1 - d.p_h_hi + d.R_h < 0 or d.K_w - 1 - d.p_w_hi + d.R_w < 0:
+        return "high-side transposed-conv padding K-1-P_hi+R is negative"
+    return None
+
+
+def _capability_gap(e: Engine, d: ConvDims) -> str | None:
+    """None when ``e`` can serve geometry ``d``, else the human reason."""
+    if d.s_h != d.s_w and not e.asym_stride:
+        return (f"asymmetric stride ({d.s_h}, {d.s_w}) needs per-axis phase "
+                "support")
+    if e.paper_geometry:
+        gap = _paper_geometry_gap(d)
+        if gap is not None:
+            return f"geometry outside the paper's constraints ({gap})"
+    return None
+
+
+def _pallas_fits(pass_name: str, d: ConvDims) -> bool:
+    from repro.kernels import ops
+    if pass_name == "forward":
+        return ops.forward_plan(d).fits
+    if pass_name == "input_grad":
+        return ops.input_grad_plan(d) is not None
+    return ops.weight_grad_plan(d).fits
+
+
+_FALLBACK_CHAIN = ("bp_phase", "lax")
+
+
+def _first_capable(d: ConvDims, reason: str) -> tuple[str, str]:
+    for name in _FALLBACK_CHAIN:
+        if name in ENGINES and _capability_gap(ENGINES[name], d) is None:
+            return name, reason
+    return "lax", reason
+
+
+def resolve_engine(requested: str, pass_name: str,
+                   d: ConvDims) -> tuple[str, str]:
+    """One pass's selection: ``(engine actually used, reason)``.
+
+    ``"auto"`` is the shape-dependent strategy: stride-1 layers have no
+    zero-space (the phase decomposition degenerates to the native dense
+    conv, which is optimal), strided layers go to the Pallas tap-GEMM
+    whenever the tile plan fits, and everything else falls back down
+    ``bp_phase -> lax`` with the reason recorded.  Explicit requests that
+    the engine cannot serve resolve the same way -- recorded, not silent.
+    """
+    if requested == AUTO:
+        if d.s_h == 1 and d.s_w == 1:
+            if _capability_gap(ENGINES["bp_phase"], d) is None:
+                return "bp_phase", ("auto: stride 1 has no zero-space; "
+                                    "phase decomposition degenerates to the "
+                                    "native dense conv")
+            return _first_capable(
+                d, "auto: stride 1, geometry outside implicit constraints")
+        gap = _capability_gap(ENGINES["pallas"], d)
+        if gap is None and _pallas_fits(pass_name, d):
+            return "pallas", "auto: tap-GEMM tile plan fits the VMEM budget"
+        return _first_capable(
+            d, f"auto: pallas unavailable "
+               f"({gap or 'tile plan exceeds the VMEM budget'})")
+    e = _engine(requested)
+    gap = _capability_gap(e, d)
+    if gap is not None:
+        return _first_capable(d, f"{requested} requested but {gap}")
+    if requested == "pallas" and not _pallas_fits(pass_name, d):
+        return _first_capable(
+            d, "pallas requested but the tile plan exceeds the VMEM budget")
+    return requested, "requested"
+
+
+def _dispatch(pass_name: str, requested: str, d: ConvDims) -> Engine:
+    name, reason = resolve_engine(requested, pass_name, d)
+    key = f"{pass_name}:{name}"
+    DISPATCH_EVENTS[key] = DISPATCH_EVENTS.get(key, 0) + 1
+    if len(POLICY_DECISIONS) < _MAX_DECISIONS:
+        POLICY_DECISIONS.append({
+            "pass": pass_name, "requested": requested, "engine": name,
+            "reason": reason,
+            "dims": (d.B, d.C, d.H_i, d.W_i, d.N, d.K_h, d.K_w,
+                     d.s_h, d.s_w)})
+    return ENGINES[name]
+
+
+def _validate_policy(policy: EnginePolicy) -> EnginePolicy:
+    for _, engine in policy.slots():
+        if engine != AUTO:
+            _engine(engine)           # raises on unknown names
+    return policy
 
 
 # ---------------------------------------------------------------------------
@@ -165,124 +384,273 @@ def _merge_groups(yg):
     return yg.transpose(1, 0, 2, 3, 4).reshape(b, g * ng, h, w)
 
 
-def _forward(x, w, d: ConvDims, mode: Mode, groups: int):
+def _forward(x, w, d: ConvDims, eng: Engine, groups: int):
     if groups == 1:
-        return _engine(mode).forward(x, w, d)
-    if mode == "lax":
+        return eng.forward(x, w, d)
+    if eng.name == "lax":
         return jax.lax.conv_general_dilated(
-            x, w, (d.S, d.S),
+            x, w, (d.s_h, d.s_w),
             [(d.P_h, d.p_h_hi), (d.P_w, d.p_w_hi)],
             dimension_numbers=("NCHW", "OIHW", "NCHW"),
             feature_group_count=groups)
     xg, wg = _split_groups(x, w, groups)
-    yg = jax.vmap(lambda xx, ww: _engine(mode).forward(xx, ww, d))(xg, wg)
+    yg = jax.vmap(lambda xx, ww: eng.forward(xx, ww, d))(xg, wg)
     return _merge_groups(yg)
 
 
-def _input_grad(dy, w, d: ConvDims, mode: Mode, groups: int):
+def _input_grad(dy, w, d: ConvDims, eng: Engine, groups: int):
     if groups == 1:
-        return _engine(mode).input_grad(dy, w, d)
+        return eng.input_grad(dy, w, d)
     b = dy.shape[0]
     dyg = dy.reshape(b, groups, d.N, d.H_o, d.W_o).transpose(1, 0, 2, 3, 4)
     wg = w.reshape(groups, d.N, *w.shape[1:])
-    dxg = jax.vmap(lambda dd, ww: _engine(mode).input_grad(dd, ww, d))(dyg, wg)
+    dxg = jax.vmap(lambda dd, ww: eng.input_grad(dd, ww, d))(dyg, wg)
     return _merge_groups(dxg)
 
 
-def _weight_grad(x, dy, d: ConvDims, mode: Mode, groups: int):
+def _weight_grad(x, dy, d: ConvDims, eng: Engine, groups: int):
     if groups == 1:
-        return _engine(mode).weight_grad(x, dy, d)
+        return eng.weight_grad(x, dy, d)
     b, c = x.shape[0], x.shape[1]
     xg = x.reshape(b, groups, c // groups, d.H_i, d.W_i).transpose(
         1, 0, 2, 3, 4)
     dyg = dy.reshape(b, groups, d.N, d.H_o, d.W_o).transpose(1, 0, 2, 3, 4)
-    dwg = jax.vmap(lambda xx, dd: _engine(mode).weight_grad(xx, dd, d))(
+    dwg = jax.vmap(lambda xx, dd: eng.weight_grad(xx, dd, d))(
         xg, dyg)                                   # (g, N/g, C/g, Kh, Kw)
     return dwg.reshape(groups * d.N, d.C, d.K_h, d.K_w)
 
 
 # ---------------------------------------------------------------------------
-# custom_vjp conv
+# Policy override context and the default policy
 # ---------------------------------------------------------------------------
 
-@partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5))
-def conv2d(x: jax.Array, w: jax.Array, stride: int = 1,
-           padding=(0, 0), mode: Mode = "bp_phase",
-           groups: int = 1) -> jax.Array:
-    """NCHW x OIHW -> NCHW convolution with a selectable backprop engine.
+#: the repo-wide default: shape-dependent per-pass selection.
+DEFAULT_POLICY = EnginePolicy()
 
-    padding: int, (pad_h, pad_w), or ((top, bottom), (left, right)).
-    groups:  feature groups; ``groups == C`` is depthwise.
+_POLICY_OVERRIDE: list[EnginePolicy] = []
+
+
+@contextlib.contextmanager
+def conv_policy(policy):
+    """Scoped policy override for EVERY conv2d/conv1d in the dynamic extent.
+
+    Beats per-call and per-config policies, so an experiment can swap
+    engines without rebuilding the model::
+
+        with conv_policy("fwd=lax,dgrad=pallas,wgrad=bp_phase"):
+            grads = jax.grad(loss)(params)      # traced under the override
+
+    Applies at TRACE time (the policy is a static jit argument): wrap the
+    call that traces, not an already-compiled executable.
     """
-    d = _checked_dims(x.shape, w.shape, stride, padding, mode, groups)
-    return _forward(x, w, d, mode, groups)
+    p = EnginePolicy.coerce(policy)
+    _validate_policy(p)
+    _POLICY_OVERRIDE.append(p)
+    try:
+        yield p
+    finally:
+        _POLICY_OVERRIDE.pop()
 
 
-def _checked_dims(x_shape, w_shape, stride, padding, mode, groups):
-    d = make_dims(x_shape, w_shape, stride, padding, groups)
-    if mode != "lax":
-        # The implicit engines assume the paper's geometry (P <= K-1 etc.);
-        # fail at trace time with a clear message, not inside a deep pad op.
-        d.validate()
-    return d
+def effective_policy(explicit=None) -> EnginePolicy:
+    """Override stack > per-call/explicit policy > DEFAULT_POLICY (auto)."""
+    if _POLICY_OVERRIDE:
+        return _POLICY_OVERRIDE[-1]
+    if explicit is not None:
+        return EnginePolicy.coerce(explicit)
+    return DEFAULT_POLICY
 
 
-def _conv2d_fwd(x, w, stride, padding, mode, groups):
-    d = _checked_dims(x.shape, w.shape, stride, padding, mode, groups)
-    return _forward(x, w, d, mode, groups), (x, w)
+# ---------------------------------------------------------------------------
+# custom_vjp conv on the structured surface
+# ---------------------------------------------------------------------------
+
+@partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def _conv2d(x: jax.Array, w: jax.Array, spec: ConvSpec,
+            policy: EnginePolicy) -> jax.Array:
+    d = spec_dims(x.shape, w.shape, spec)
+    eng = _dispatch("forward", policy.forward, d)
+    return _forward(x, _dilate_weight(w, spec), d, eng, spec.groups)
 
 
-def _conv2d_bwd(stride, padding, mode, groups, res, dy):
+def _conv2d_fwd(x, w, spec, policy):
+    d = spec_dims(x.shape, w.shape, spec)
+    eng = _dispatch("forward", policy.forward, d)
+    y = _forward(x, _dilate_weight(w, spec), d, eng, spec.groups)
+    return y, (x, w)
+
+
+def _conv2d_bwd(spec, policy, res, dy):
     x, w = res
-    d = make_dims(x.shape, w.shape, stride, padding, groups)
-    dx = _input_grad(dy, w, d, mode, groups)
-    dw = _weight_grad(x, dy, d, mode, groups)
+    d = spec_dims(x.shape, w.shape, spec)
+    w_eff = _dilate_weight(w, spec)
+    eng_i = _dispatch("input_grad", policy.input_grad, d)
+    eng_w = _dispatch("weight_grad", policy.weight_grad, d)
+    dx = _input_grad(dy, w_eff, d, eng_i, spec.groups)
+    dw = _undilate_dweight(_weight_grad(x, dy, d, eng_w, spec.groups), spec)
     return dx.astype(x.dtype), dw.astype(w.dtype)
 
 
-conv2d.defvjp(_conv2d_fwd, _conv2d_bwd)
+_conv2d.defvjp(_conv2d_fwd, _conv2d_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Public entry point: structured surface + backward-compat shim
+# ---------------------------------------------------------------------------
+
+_LEGACY_POSITIONAL = ("stride", "padding", "mode", "groups")
+
+
+def _deprecated_mode(mode) -> EnginePolicy:
+    warnings.warn(
+        "conv2d(..., mode=...) is deprecated; pass policy='<engine>' "
+        "(uniform) or an EnginePolicy (per-pass) instead",
+        DeprecationWarning, stacklevel=4)
+    return EnginePolicy.uniform(mode)
+
+
+def _canon_call(args: tuple, kw: dict) -> tuple[ConvSpec, EnginePolicy | None]:
+    """Interpret both call surfaces:
+
+    new:    conv2d(x, w, spec: ConvSpec, policy=...)  (or geometry kwargs)
+    legacy: conv2d(x, w, stride, padding, mode, groups)  (mode deprecated)
+    """
+    spec = kw.pop("spec", None)
+    policy = kw.pop("policy", None)
+    mode = kw.pop("mode", None)
+    geom = {k: kw.pop(k) for k in ("stride", "padding", "dilation", "groups",
+                                   "layout") if k in kw}
+    if kw:
+        raise TypeError(f"conv2d got unexpected kwargs {sorted(kw)}")
+    args = list(args)
+    if args and isinstance(args[0], ConvSpec):
+        if spec is not None:
+            raise TypeError("ConvSpec given both positionally and as spec=")
+        spec = args.pop(0)
+        if args:
+            if policy is not None:
+                raise TypeError("policy given twice")
+            policy = args.pop(0)
+        if args:
+            raise TypeError("too many positional arguments after ConvSpec")
+    elif args and isinstance(args[0], (str, EnginePolicy)):
+        # conv2d(x, w, "pallas") / conv2d(x, w, EnginePolicy(...)): a
+        # leading policy with default/kwarg geometry (legacy stride is
+        # numeric, so this is unambiguous).
+        if policy is not None:
+            raise TypeError("policy given twice")
+        policy = args.pop(0)
+        if args:
+            raise TypeError("too many positional arguments after policy")
+    elif args:
+        # Legacy positional (stride, padding, mode, groups).
+        if len(args) > len(_LEGACY_POSITIONAL):
+            raise TypeError("too many positional arguments")
+        for name, val in zip(_LEGACY_POSITIONAL, args):
+            if name == "mode":
+                if mode is not None:
+                    raise TypeError("mode given twice")
+                mode = val
+            else:
+                if name in geom:
+                    raise TypeError(f"{name} given twice")
+                geom[name] = val
+    if mode is not None:
+        if policy is not None:
+            raise TypeError("pass either policy= or the deprecated mode=, "
+                            "not both")
+        policy = _deprecated_mode(mode)
+    if spec is None:
+        spec = ConvSpec.make(**geom)
+    elif geom:
+        raise TypeError(
+            f"geometry given both in the ConvSpec and as kwargs "
+            f"{sorted(geom)}; put it all in the spec")
+    return spec, policy
+
+
+def conv2d(x: jax.Array, w: jax.Array, *args, **kwargs) -> jax.Array:
+    """NCHW x OIHW -> NCHW convolution with per-pass backprop engines.
+
+    New surface: ``conv2d(x, w, spec: ConvSpec, policy=EnginePolicy | str)``
+    (or the non-deprecated geometry kwargs ``stride= padding= dilation=
+    groups= layout=``, which build the spec).  ``policy`` is an
+    :class:`EnginePolicy`, a policy string (``"fwd=pallas,dgrad=auto,
+    wgrad=bp_phase"``), a bare engine name (uniform), or None for the
+    ``auto`` default; a surrounding :func:`conv_policy` context overrides
+    it.  Legacy surface ``conv2d(x, w, stride, padding, mode, groups)``
+    still works; ``mode=`` emits a ``DeprecationWarning``.
+
+    ``spec.layout == "NHWC"`` transposes activations at the boundary
+    (weights stay OIHW); everything inside runs NCHW.
+    """
+    spec, policy = _canon_call(args, kwargs)
+    policy = _validate_policy(effective_policy(policy))
+    if spec.layout == "NHWC":
+        y = _conv2d(jnp.transpose(x, (0, 3, 1, 2)), w,
+                    spec.with_layout("NCHW"), policy)
+        return jnp.transpose(y, (0, 2, 3, 1))
+    return _conv2d(x, w, spec, policy)
 
 
 # ---------------------------------------------------------------------------
 # 1-D and depthwise wrappers (Mamba2 / RecurrentGemma temporal convs)
 # ---------------------------------------------------------------------------
 
+def _merge_policy(policy, mode):
+    if mode is not None:
+        if policy is not None:
+            raise TypeError("pass either policy= or the deprecated mode=, "
+                            "not both")
+        return _deprecated_mode(mode)
+    return policy
+
+
 def conv1d(x: jax.Array, w: jax.Array, stride: int = 1, padding=0,
-           mode: Mode = "bp_phase", groups: int = 1) -> jax.Array:
+           policy=None, groups: int = 1, dilation: int = 1, *,
+           mode=None) -> jax.Array:
     """(B, C, L) x (N, C/g, K) -> (B, N, L_o) through the 2-D engines.
 
-    padding: int (symmetric) or (lo, hi) along the temporal dim.
+    padding: int (symmetric) or (lo, hi) along the temporal dim.  The
+    stride/dilation are applied symmetrically on the degenerate (H=1) axis
+    too, so the square-stride engines (pallas, bp_im2col) stay eligible.
     """
+    policy = _merge_policy(policy, mode)
     if isinstance(padding, int):
         padding = (padding, padding)
+    spec = ConvSpec.make(stride=stride, padding=((0, 0), tuple(padding)),
+                         dilation=dilation, groups=groups)
     x4 = x[:, :, None, :]
     w4 = w[:, :, None, :]
-    y = conv2d(x4, w4, stride, ((0, 0), tuple(padding)), mode, groups)
+    y = conv2d(x4, w4, spec, policy)
     return y[:, :, 0, :]
 
 
-def conv1d_causal(x: jax.Array, w: jax.Array, mode: Mode = "bp_phase",
-                  groups: int = 1) -> jax.Array:
+def conv1d_causal(x: jax.Array, w: jax.Array, policy=None,
+                  groups: int = 1, *, mode=None) -> jax.Array:
     """Causal (left-pad K-1) stride-1 conv1d: (B, C, L) -> (B, N, L)."""
     k = w.shape[-1]
-    return conv1d(x, w, 1, (k - 1, 0), mode, groups)
+    return conv1d(x, w, 1, (k - 1, 0), _merge_policy(policy, mode), groups)
 
 
 def depthwise_causal_conv1d(x: jax.Array, w: jax.Array,
-                            mode: Mode = "bp_phase") -> jax.Array:
+                            policy=None, *, mode=None) -> jax.Array:
     """Causal depthwise conv used by Mamba2: x (B, L, C), w (K, C).
 
     Lowered as a grouped (groups == C) causal conv1d: the causal shift is an
     asymmetric left-only pad and each channel convolves with its own K-tap
     filter, so the BP-im2col datapath is exercised for the depthwise case
-    too.  The lax and bp_phase paths short-circuit to one fused
-    conv_general_dilated with feature_group_count: a stride-1 backward has
-    no zero-insertion, so the phase decomposition degenerates to exactly
-    the native conv (same math, one XLA op on the production hot path).
+    too.  When every pass of the effective policy resolves inside
+    {lax, bp_phase, auto} the layer short-circuits to ONE fused
+    ``conv_general_dilated`` with ``feature_group_count``: a stride-1
+    backward has no zero-insertion, so the phase decomposition (and the
+    auto policy, whose stride-1 rule picks it) degenerates to exactly the
+    native conv -- same math, one XLA op on the production hot path.
     """
     b, l, c = x.shape
     k = w.shape[0]
-    if mode in ("lax", "bp_phase"):
+    p = effective_policy(_merge_policy(policy, mode))
+    if {p.forward, p.input_grad, p.weight_grad} <= {"lax", "bp_phase", AUTO}:
         xt = x.transpose(0, 2, 1)[:, :, None, :]            # (B, C, 1, L)
         wt = w.T[:, None, None, :]                          # (C, 1, 1, K)
         y = jax.lax.conv_general_dilated(
@@ -292,7 +660,7 @@ def depthwise_causal_conv1d(x: jax.Array, w: jax.Array,
         return y[:, :, 0, :].transpose(0, 2, 1)
     xt = x.transpose(0, 2, 1)                           # (B, C, L)
     wt = w.T[:, None, :]                                # (C, 1, K)
-    y = conv1d_causal(xt, wt, mode=mode, groups=c)      # (B, C, L)
+    y = conv1d_causal(xt, wt, p, groups=c)              # (B, C, L)
     return y.transpose(0, 2, 1)
 
 
@@ -300,14 +668,54 @@ def output_shape(d: ConvDims) -> tuple[int, int, int, int]:
     return (d.B, d.N, d.H_o, d.W_o)
 
 
-def conv_plan_report(x_shape, w_shape, stride: int = 1, padding=0,
+# ---------------------------------------------------------------------------
+# Static introspection: what WOULD dispatch, and why
+# ---------------------------------------------------------------------------
+
+def resolve_policy(d: ConvDims, policy=None) -> dict[str, dict[str, str]]:
+    """Pure per-pass resolution for one per-group geometry: no arrays, no
+    event recording.  ``{pass: {requested, engine, reason}}``."""
+    p = _validate_policy(EnginePolicy.coerce(policy) if policy is not None
+                         else DEFAULT_POLICY)
+    out = {}
+    for pass_name, requested in p.slots():
+        engine, reason = resolve_engine(requested, pass_name, d)
+        out[pass_name] = {"requested": requested, "engine": engine,
+                          "reason": reason}
+    return out
+
+
+def policy_report(x_shape, w_shape, spec=None, policy=None) -> dict:
+    """Static dispatch summary for one conv layer under one policy: the
+    per-pass engines the resolver would pick (with reasons) plus the Pallas
+    tile plans when the spec is planner-eligible (symmetric stride)."""
+    spec = ConvSpec.coerce(spec)
+    d = spec_dims(x_shape, w_shape, spec)
+    report = {"passes": resolve_policy(d, policy), "spec": str(spec)}
+    if d.s_h == d.s_w:
+        from repro.kernels import ops
+        report["plan"] = ops.plan_report(d)
+    else:
+        report["plan"] = {"pallas_path": False,
+                          "reason": "asymmetric stride"}
+    report["pallas_path"] = all(
+        v["engine"] == "pallas" for v in report["passes"].values())
+    return report
+
+
+def conv_plan_report(x_shape, w_shape, stride=1, padding=0,
                      groups: int = 1,
                      budget: int | None = None) -> dict[str, object]:
     """Static Pallas dispatch summary for one conv layer: per-op tile plans
     (spatial/channel tiles, split counts, VMEM footprint) and whether the
     whole layer stays on the Pallas path.  Convenience wrapper over
     ``repro.kernels.ops.plan_report`` taking array shapes instead of a
-    ``ConvDims``; pure planner introspection, no arrays are touched."""
+    ``ConvDims``; pure planner introspection, no arrays are touched.
+    Asymmetric strides are planner-ineligible and report
+    ``pallas_path=False`` (like :func:`policy_report`) instead of
+    raising."""
     from repro.kernels import ops
     d = make_dims(x_shape, w_shape, stride, padding, groups)
+    if d.s_h != d.s_w:
+        return {"pallas_path": False, "reason": "asymmetric stride"}
     return ops.plan_report(d, budget)

@@ -1,0 +1,236 @@
+"""Structured convolution geometry (``ConvSpec``) and per-pass engine
+selection (``EnginePolicy``).
+
+These two frozen dataclasses replace the stringly
+``conv2d(..., stride=int, padding=..., mode=<engine name>)`` surface:
+
+  * ``ConvSpec`` carries the full geometry of one conv layer -- per-axis
+    stride ``(s_h, s_w)``, per-axis dilation, asymmetric padding
+    ``((top, bottom), (left, right))``, feature ``groups`` and activation
+    ``layout`` (``"NCHW"`` native, ``"NHWC"`` transposed at the dispatch
+    boundary).  One spec describes the layer; the engines never re-parse
+    loose kwargs.
+
+  * ``EnginePolicy`` names the backprop engine *independently per pass*
+    (``forward`` / ``input_grad`` / ``weight_grad``).  Each slot is an
+    engine name from the ``repro.core.conv.ENGINES`` registry or ``"auto"``,
+    which lets the dispatcher consult the Pallas tile planner and the spec's
+    geometry: the paper's point is that the three GEMMs of backprop have
+    *different* optimal datapaths, so the policy is the unit of selection,
+    not a single mode string.
+
+Both are hashable (they ride as ``jax.custom_vjp`` nondiff arguments and as
+jit cache keys) and cheap to construct.  Parsing accepts the CLI grammar
+
+    fwd=pallas,dgrad=auto,wgrad=bp_phase
+
+with the aliases fwd/forward, dgrad/igrad/input_grad/dx and
+wgrad/weight_grad/dw, plus the degenerate spellings ``"auto"`` (every pass
+auto) and a bare engine name (uniform policy -- the exact semantics of the
+deprecated ``mode=`` string).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+LAYOUTS = ("NCHW", "NHWC")
+
+#: the three lowered GEMMs of one conv layer, in dispatch order.
+PASSES = ("forward", "input_grad", "weight_grad")
+
+_PASS_ALIASES = {
+    "fwd": "forward", "forward": "forward", "f": "forward",
+    "dgrad": "input_grad", "igrad": "input_grad", "input_grad": "input_grad",
+    "dx": "input_grad", "di": "input_grad",
+    "wgrad": "weight_grad", "weight_grad": "weight_grad", "dw": "weight_grad",
+}
+
+
+def _pair(v, name: str) -> tuple[int, int]:
+    """int | (a, b) -> (a, b) with positivity check."""
+    if isinstance(v, int):
+        v = (v, v)
+    a, b = int(v[0]), int(v[1])
+    if a < 1 or b < 1:
+        raise ValueError(f"{name} must be >= 1, got {(a, b)}")
+    return a, b
+
+
+def _norm_padding(padding):
+    """int | (ph, pw) | ((top, bottom), (left, right)) -> nested tuples."""
+    if isinstance(padding, int):
+        return (padding, padding), (padding, padding)
+    ph, pw = padding
+    if isinstance(ph, int):
+        ph = (ph, ph)
+    if isinstance(pw, int):
+        pw = (pw, pw)
+    out = (int(ph[0]), int(ph[1])), (int(pw[0]), int(pw[1]))
+    if min(out[0] + out[1]) < 0:
+        raise ValueError(f"padding must be non-negative, got {out}")
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvSpec:
+    """Complete static geometry of one convolution.
+
+    Fields are stored fully normalized (every axis pair explicit) so two
+    specs spelled differently but geometrically identical compare and hash
+    equal -- they share one jit trace and one tile-plan cache entry.
+    """
+
+    stride: tuple[int, int] = (1, 1)
+    dilation: tuple[int, int] = (1, 1)
+    padding: tuple[tuple[int, int], tuple[int, int]] = ((0, 0), (0, 0))
+    groups: int = 1
+    layout: str = "NCHW"
+
+    def __post_init__(self):
+        if self.layout not in LAYOUTS:
+            raise ValueError(f"layout must be one of {LAYOUTS}, "
+                             f"got {self.layout!r}")
+        if self.groups < 1:
+            raise ValueError(f"groups must be >= 1, got {self.groups}")
+
+    # -- constructors -----------------------------------------------------
+
+    @classmethod
+    def make(cls, stride=1, padding=0, dilation=1, groups: int = 1,
+             layout: str = "NCHW") -> "ConvSpec":
+        """Normalizing constructor: ints / loose pairs accepted everywhere."""
+        return cls(stride=_pair(stride, "stride"),
+                   dilation=_pair(dilation, "dilation"),
+                   padding=_norm_padding(padding),
+                   groups=int(groups), layout=layout)
+
+    @classmethod
+    def coerce(cls, value) -> "ConvSpec":
+        """ConvSpec | None | dict of make() kwargs -> ConvSpec."""
+        if value is None:
+            return cls()
+        if isinstance(value, cls):
+            return value
+        if isinstance(value, dict):
+            return cls.make(**value)
+        raise TypeError(f"cannot interpret {value!r} as a ConvSpec")
+
+    # -- accessors --------------------------------------------------------
+
+    @property
+    def s_h(self) -> int:
+        return self.stride[0]
+
+    @property
+    def s_w(self) -> int:
+        return self.stride[1]
+
+    @property
+    def d_h(self) -> int:
+        return self.dilation[0]
+
+    @property
+    def d_w(self) -> int:
+        return self.dilation[1]
+
+    @property
+    def symmetric_stride(self) -> bool:
+        return self.stride[0] == self.stride[1]
+
+    @property
+    def has_dilation(self) -> bool:
+        return self.dilation != (1, 1)
+
+    def effective_kernel(self, kh: int, kw: int) -> tuple[int, int]:
+        """Dilated kernel extent: K_eff = (K - 1) * D + 1 per axis."""
+        return (kh - 1) * self.d_h + 1, (kw - 1) * self.d_w + 1
+
+    def with_layout(self, layout: str) -> "ConvSpec":
+        return dataclasses.replace(self, layout=layout)
+
+
+#: sentinel engine name: the dispatcher chooses per pass from the planner.
+AUTO = "auto"
+
+
+@dataclasses.dataclass(frozen=True)
+class EnginePolicy:
+    """Backprop-engine selection, one slot per conv pass.
+
+    Each slot holds an engine name registered in ``repro.core.conv.ENGINES``
+    or ``"auto"``.  ``"auto"`` defers the choice to the dispatcher, which
+    consults the spec's geometry and the Pallas tile planner per pass and
+    records WHY the engine it picked won (``repro.core.conv.
+    policy_decisions()``).
+    """
+
+    forward: str = AUTO
+    input_grad: str = AUTO
+    weight_grad: str = AUTO
+
+    # -- constructors -----------------------------------------------------
+
+    @classmethod
+    def uniform(cls, engine: str) -> "EnginePolicy":
+        """One engine for all three passes -- the old ``mode=`` semantics."""
+        return cls(forward=engine, input_grad=engine, weight_grad=engine)
+
+    @classmethod
+    def parse(cls, text: str) -> "EnginePolicy":
+        """Parse ``"fwd=pallas,dgrad=auto,wgrad=bp_phase"`` (aliases above;
+        unnamed passes default to ``auto``), ``"auto"`` or a bare engine
+        name (uniform)."""
+        text = text.strip()
+        if "=" not in text:
+            return cls.uniform(text)
+        slots = {}
+        for item in text.split(","):
+            item = item.strip()
+            if not item:
+                continue
+            if "=" not in item:
+                raise ValueError(
+                    f"bad policy item {item!r}: expected pass=engine")
+            key, engine = (s.strip() for s in item.split("=", 1))
+            try:
+                canon = _PASS_ALIASES[key]
+            except KeyError:
+                raise ValueError(
+                    f"unknown conv pass {key!r}; use one of "
+                    f"{sorted(set(_PASS_ALIASES))}") from None
+            if canon in slots:
+                raise ValueError(f"duplicate policy slot for {canon!r}")
+            slots[canon] = engine
+        return cls(**slots)
+
+    @classmethod
+    def coerce(cls, value) -> "EnginePolicy":
+        """EnginePolicy | engine-name | policy-string | dict | None."""
+        if value is None:
+            return cls()
+        if isinstance(value, cls):
+            return value
+        if isinstance(value, str):
+            return cls.parse(value)
+        if isinstance(value, dict):
+            return cls(**{_PASS_ALIASES[k]: v for k, v in value.items()})
+        raise TypeError(f"cannot interpret {value!r} as an EnginePolicy")
+
+    # -- accessors --------------------------------------------------------
+
+    def slot(self, pass_name: str) -> str:
+        return getattr(self, _PASS_ALIASES[pass_name])
+
+    def slots(self) -> tuple[tuple[str, str], ...]:
+        return tuple((p, getattr(self, p)) for p in PASSES)
+
+    @property
+    def is_uniform(self) -> bool:
+        return self.forward == self.input_grad == self.weight_grad
+
+    def __str__(self) -> str:
+        if self.is_uniform:
+            return self.forward
+        return (f"fwd={self.forward},dgrad={self.input_grad},"
+                f"wgrad={self.weight_grad}")

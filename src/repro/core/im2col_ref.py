@@ -40,6 +40,13 @@ class ConvDims:
     asymmetric padding (e.g. causal temporal convs pad only the left side).
     All the implicit address mappings depend only on the low-side pad; the
     high side enters through ``H_o``/``W_o`` and the remainders.
+
+    ``S`` is the row stride.  The column stride ``S_w`` defaults to the
+    ``-1`` sentinel meaning "same as ``S``" (the paper's square case); the
+    per-axis accessors ``s_h``/``s_w`` resolve it.  The explicit baseline,
+    the lax reference and the phase decomposition support ``s_h != s_w``;
+    the Algorithm 1/2 gathers and the Pallas planners require symmetry and
+    are capability-gated by the engine policy resolver.
     """
 
     B: int       # batch
@@ -49,11 +56,20 @@ class ConvDims:
     N: int       # output channels
     K_h: int     # kernel height
     K_w: int     # kernel width
-    S: int = 1   # stride (same both dims, as in the paper)
+    S: int = 1   # row stride (and column stride when S_w == -1)
     P_h: int = 0
     P_w: int = 0
     P_h_hi: int = -1   # -1: symmetric (same as P_h)
     P_w_hi: int = -1   # -1: symmetric (same as P_w)
+    S_w: int = -1      # -1: symmetric (same as S)
+
+    @property
+    def s_h(self) -> int:
+        return self.S
+
+    @property
+    def s_w(self) -> int:
+        return self.S if self.S_w < 0 else self.S_w
 
     @property
     def p_h_hi(self) -> int:
@@ -65,20 +81,20 @@ class ConvDims:
 
     @property
     def H_o(self) -> int:
-        return (self.H_i + self.P_h + self.p_h_hi - self.K_h) // self.S + 1
+        return (self.H_i + self.P_h + self.p_h_hi - self.K_h) // self.s_h + 1
 
     @property
     def W_o(self) -> int:
-        return (self.W_i + self.P_w + self.p_w_hi - self.K_w) // self.S + 1
+        return (self.W_i + self.P_w + self.p_w_hi - self.K_w) // self.s_w + 1
 
     # Zero-inserted sizes (Table I): H_o'' / W_o''
     @property
     def H_o2(self) -> int:
-        return self.H_o + (self.H_o - 1) * (self.S - 1)
+        return self.H_o + (self.H_o - 1) * (self.s_h - 1)
 
     @property
     def W_o2(self) -> int:
-        return self.W_o + (self.W_o - 1) * (self.S - 1)
+        return self.W_o + (self.W_o - 1) * (self.s_w - 1)
 
     # Zero-inserted AND zero-padded sizes (Table I): H_o''' / W_o'''
     # (+R: general-tiling correction, zero under the paper's assumptions)
@@ -98,12 +114,12 @@ class ConvDims:
     @property
     def R_h(self) -> int:
         return (self.H_i + self.P_h + self.p_h_hi - self.K_h
-                - (self.H_o - 1) * self.S)
+                - (self.H_o - 1) * self.s_h)
 
     @property
     def R_w(self) -> int:
         return (self.W_i + self.P_w + self.p_w_hi - self.K_w
-                - (self.W_o - 1) * self.S)
+                - (self.W_o - 1) * self.s_w)
 
     def validate(self) -> None:
         assert self.H_o >= 1 and self.W_o >= 1
@@ -142,14 +158,18 @@ class ConvDims:
 # Zero-space construction (the data reorganization BP-im2col eliminates)
 # ---------------------------------------------------------------------------
 
-def zero_insert(x: jax.Array, S: int) -> jax.Array:
-    """Insert S-1 zeros between spatial elements: (..., H, W) -> (..., H'', W'')."""
-    if S == 1:
+def zero_insert(x: jax.Array, S) -> jax.Array:
+    """Insert S-1 zeros between spatial elements: (..., H, W) -> (..., H'', W'').
+
+    ``S`` is an int (same both dims) or a per-axis pair ``(s_h, s_w)``.
+    """
+    s_h, s_w = (S, S) if isinstance(S, int) else S
+    if s_h == 1 and s_w == 1:
         return x
     *lead, H, W = x.shape
-    out = jnp.zeros((*lead, H + (H - 1) * (S - 1), W + (W - 1) * (S - 1)),
+    out = jnp.zeros((*lead, H + (H - 1) * (s_h - 1), W + (W - 1) * (s_w - 1)),
                     dtype=x.dtype)
-    return out.at[..., ::S, ::S].set(x)
+    return out.at[..., ::s_h, ::s_w].set(x)
 
 
 def zero_pad(x: jax.Array, ph: int, pw: int, ph_hi: int | None = None,
@@ -170,7 +190,7 @@ def zero_insert_pad(dy: jax.Array, d: ConvDims) -> jax.Array:
     stride-1 valid conv reproduces the full H_i x W_i input gradient (R is
     the forward tiling remainder, zero in the paper's idealized formulas).
     """
-    return zero_pad(zero_insert(dy, d.S),
+    return zero_pad(zero_insert(dy, (d.s_h, d.s_w)),
                     d.K_h - 1 - d.P_h, d.K_w - 1 - d.P_w,
                     d.K_h - 1 - d.p_h_hi + d.R_h,
                     d.K_w - 1 - d.p_w_hi + d.R_w)
@@ -185,18 +205,20 @@ def rot180(w: jax.Array) -> jax.Array:
 # Explicit im2col (stride-1 lowering used by all three backprop GEMMs)
 # ---------------------------------------------------------------------------
 
-def im2col(x: jax.Array, kh: int, kw: int, stride: int = 1) -> jax.Array:
+def im2col(x: jax.Array, kh: int, kw: int, stride=1) -> jax.Array:
     """Lower (B, C, H, W) into the dynamic matrix (B*H_o*W_o, C*kh*kw).
 
-    This materializes the matrix copy -- the storage/bandwidth overhead the
+    ``stride`` is an int or a per-axis ``(s_h, s_w)`` pair.  This
+    materializes the matrix copy -- the storage/bandwidth overhead the
     implicit algorithms avoid.
     """
+    s_h, s_w = (stride, stride) if isinstance(stride, int) else stride
     b, c, h, w = x.shape
-    ho = (h - kh) // stride + 1
-    wo = (w - kw) // stride + 1
+    ho = (h - kh) // s_h + 1
+    wo = (w - kw) // s_w + 1
     # (B, C*kh*kw, ho*wo) patches
     patches = jax.lax.conv_general_dilated_patches(
-        x, (kh, kw), (stride, stride), padding="VALID",
+        x, (kh, kw), (s_h, s_w), padding="VALID",
         dimension_numbers=("NCHW", "OIHW", "NCHW"))
     patches = patches.reshape(b, c * kh * kw, ho * wo)
     return patches.transpose(0, 2, 1).reshape(b * ho * wo, c * kh * kw)
@@ -209,7 +231,7 @@ def im2col(x: jax.Array, kh: int, kw: int, stride: int = 1) -> jax.Array:
 def conv2d_forward_explicit(x: jax.Array, w: jax.Array, d: ConvDims) -> jax.Array:
     """Inference: Y = im2col(pad(I)) @ W  -- traditional im2col."""
     xp = zero_pad(x, d.P_h, d.P_w, d.p_h_hi, d.p_w_hi)
-    a = im2col(xp, d.K_h, d.K_w, d.S)                       # (B*Ho*Wo, C*Kh*Kw)
+    a = im2col(xp, d.K_h, d.K_w, (d.s_h, d.s_w))            # (B*Ho*Wo, C*Kh*Kw)
     b = w.reshape(d.N, d.C * d.K_h * d.K_w).T               # (C*Kh*Kw, N)
     y = a @ b                                               # (B*Ho*Wo, N)
     return y.reshape(d.B, d.H_o, d.W_o, d.N).transpose(0, 3, 1, 2)
@@ -239,8 +261,8 @@ def weight_grad_explicit(x: jax.Array, dy: jax.Array, d: ConvDims) -> jax.Array:
     """
     xe = zero_pad(x, d.P_h, d.P_w, d.p_h_hi, d.p_w_hi).transpose(1, 0, 2, 3)
     # Crop tiling-remainder rows/cols (never touched by any forward window).
-    xe = xe[:, :, :d.K_h + (d.H_o - 1) * d.S, :d.K_w + (d.W_o - 1) * d.S]
-    dyi = zero_insert(dy, d.S).transpose(1, 0, 2, 3)        # (N,B,Ho'',Wo'')
+    xe = xe[:, :, :d.K_h + (d.H_o - 1) * d.s_h, :d.K_w + (d.W_o - 1) * d.s_w]
+    dyi = zero_insert(dy, (d.s_h, d.s_w)).transpose(1, 0, 2, 3)  # (N,B,Ho'',Wo'')
     a = im2col(xe, d.H_o2, d.W_o2, 1)                       # (C*Kh*Kw, B*Ho''*Wo'')
     b = dyi.reshape(d.N, d.B * d.H_o2 * d.W_o2).T           # (B*Ho''*Wo'', N)
     dwt = a @ b                                             # (C*Kh*Kw, N)
@@ -253,7 +275,7 @@ def weight_grad_explicit(x: jax.Array, dy: jax.Array, d: ConvDims) -> jax.Array:
 
 def conv2d_lax(x: jax.Array, w: jax.Array, d: ConvDims) -> jax.Array:
     return jax.lax.conv_general_dilated(
-        x, w, (d.S, d.S), [(d.P_h, d.p_h_hi), (d.P_w, d.p_w_hi)],
+        x, w, (d.s_h, d.s_w), [(d.P_h, d.p_h_hi), (d.P_w, d.p_w_hi)],
         dimension_numbers=("NCHW", "OIHW", "NCHW"))
 
 

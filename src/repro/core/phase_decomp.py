@@ -52,27 +52,30 @@ _phase_geometry = phase_geometry          # back-compat alias
 
 
 def input_grad_phase(dy: jax.Array, w: jax.Array, d: ConvDims) -> jax.Array:
-    """dI via S*S dense stride-1 convolutions over the compact dY.
+    """dI via S_h*S_w dense stride-1 convolutions over the compact dY.
 
     Equivalent to the paper's transposed mode with all zero-space elided.
+    The decomposition is separable per axis, so asymmetric forward strides
+    (``d.s_h != d.s_w``) simply enumerate S_h x S_w phases.
     """
-    if d.S == 1:
+    s_h, s_w = d.s_h, d.s_w
+    if s_h == 1 and s_w == 1:
         # Degenerate: single phase == plain full-padding correlation.
         return _phase_conv(dy, rot180(w), d, 0, 0)
     a_h = d.K_h - 1 - d.P_h
     a_w = d.K_w - 1 - d.P_w
     wf = rot180(w)                                     # (N, C, K_h, K_w)
     di = jnp.zeros((d.B, d.C, d.H_i, d.W_i), dtype=dy.dtype)
-    for r_h in range(min(d.S, d.H_i)):
-        c_h, m_h, off_h, n_qh = phase_geometry(r_h, a_h, d.S, d.K_h, d.H_i, d.H_o)
-        for r_w in range(min(d.S, d.W_i)):
-            c_w, m_w, off_w, n_qw = phase_geometry(r_w, a_w, d.S, d.K_w, d.W_i, d.W_o)
+    for r_h in range(min(s_h, d.H_i)):
+        c_h, m_h, off_h, n_qh = phase_geometry(r_h, a_h, s_h, d.K_h, d.H_i, d.H_o)
+        for r_w in range(min(s_w, d.W_i)):
+            c_w, m_w, off_w, n_qw = phase_geometry(r_w, a_w, s_w, d.K_w, d.W_i, d.W_o)
             if n_qh == 0 or n_qw == 0:
                 continue
             if m_h == 0 or m_w == 0:
                 continue  # no taps contribute: this phase of dI stays zero
             # Static kernel subsample for this phase: (N, C, M_h, M_w)
-            wk = wf[:, :, c_h::d.S, c_w::d.S][:, :, :m_h, :m_w]
+            wk = wf[:, :, c_h::s_h, c_w::s_w][:, :, :m_h, :m_w]
             # dY window for output q starts at q + off: express as padding.
             pad_lo_h = max(0, -off_h)
             pad_lo_w = max(0, -off_w)
@@ -87,7 +90,7 @@ def input_grad_phase(dy: jax.Array, w: jax.Array, d: ConvDims) -> jax.Array:
                 window_strides=(1, 1),
                 padding=[(pad_lo_h, pad_hi_h), (pad_lo_w, pad_hi_w)],
                 dimension_numbers=("NCHW", "IOHW", "NCHW"))
-            di = di.at[:, :, r_h::d.S, r_w::d.S].set(
+            di = di.at[:, :, r_h::s_h, r_w::s_w].set(
                 out[:, :, :n_qh, :n_qw])
     return di
 
@@ -118,12 +121,13 @@ def weight_grad_phase(x: jax.Array, dy: jax.Array, d: ConvDims) -> jax.Array:
     for kh in range(d.K_h):
         row = []
         for kw in range(d.K_w):
-            # Strided view: I_pad[:, :, kh + S*oh, kw + S*ow]
+            # Strided view: I_pad[:, :, kh + S_h*oh, kw + S_w*ow]
             v = jax.lax.slice(
                 xp,
                 (0, 0, kh, kw),
-                (d.B, d.C, kh + d.S * (d.H_o - 1) + 1, kw + d.S * (d.W_o - 1) + 1),
-                (1, 1, d.S, d.S))                      # (B, C, H_o, W_o)
+                (d.B, d.C, kh + d.s_h * (d.H_o - 1) + 1,
+                 kw + d.s_w * (d.W_o - 1) + 1),
+                (1, 1, d.s_h, d.s_w))                  # (B, C, H_o, W_o)
             row.append(jnp.einsum("bnhw,bchw->nc", dy, v,
                                   preferred_element_type=jnp.float32))
         taps.append(jnp.stack(row, axis=-1))           # (N, C, K_w)

@@ -24,13 +24,16 @@ skip the search entirely.  ``tile_plan_cache_info()`` exposes hit counts;
 fallback outcomes (one event per unique shape/budget) for benchmarks & CI.
 
 ``interpret`` defaults to True because this container is CPU-only; on real
-TPU hardware set ``repro.kernels.ops.INTERPRET = False``.
+TPU hardware set ``BPIM2COL_INTERPRET=0`` in the environment (or assign
+``repro.kernels.ops.INTERPRET = False`` before the first trace) to compile
+the kernels with Mosaic instead -- no code edit required.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
@@ -40,7 +43,15 @@ from repro.core import phase_decomp
 from repro.kernels import tap_gemm as tg
 from repro.kernels.tap_gemm import _cdiv, _taps_halo
 
-INTERPRET = True
+
+def _interpret_default() -> bool:
+    """``BPIM2COL_INTERPRET`` env override: unset/1/true -> interpret mode
+    (CPU), 0/false/no/off -> compile with Mosaic (real TPU)."""
+    return os.environ.get("BPIM2COL_INTERPRET", "1").strip().lower() \
+        not in ("0", "false", "no", "off")
+
+
+INTERPRET = _interpret_default()
 VMEM_BUDGET_BYTES = 14 * 1024 * 1024
 _ELEM_BYTES = 4            # budget in f32 elements (worst case)
 
@@ -63,11 +74,18 @@ def reset_plan_events() -> None:
 
 def _canonical(d: ConvDims) -> ConvDims:
     """Resolve the P_*_hi = -1 'symmetric' sentinel to explicit high-side
-    pads so geometrically identical layers share one plan-cache entry (and
-    one plan event) no matter how the caller spelled the padding."""
-    if d.P_h_hi == d.p_h_hi and d.P_w_hi == d.p_w_hi:
+    pads (and the S_w = -1 stride sentinel) so geometrically identical
+    layers share one plan-cache entry (and one plan event) no matter how
+    the caller spelled the padding/stride."""
+    if d.s_h != d.s_w:
+        raise ValueError(
+            "the Pallas tap planners require a symmetric stride "
+            f"(s_h == s_w), got ({d.s_h}, {d.s_w}); asymmetric-stride specs "
+            "are capability-gated off the pallas engine by the policy "
+            "resolver (repro.core.conv)")
+    if d.P_h_hi == d.p_h_hi and d.P_w_hi == d.p_w_hi and d.S_w == -1:
         return d
-    return dataclasses.replace(d, P_h_hi=d.p_h_hi, P_w_hi=d.p_w_hi)
+    return dataclasses.replace(d, P_h_hi=d.p_h_hi, P_w_hi=d.p_w_hi, S_w=-1)
 
 
 # ---------------------------------------------------------------------------

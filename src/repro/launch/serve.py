@@ -26,6 +26,10 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=8)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--conv-policy", default=None,
+                    help="per-pass conv engine policy for the decode path "
+                         "(e.g. 'auto', 'bp_phase', or "
+                         "'fwd=...,dgrad=...,wgrad=...')")
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch)
@@ -33,7 +37,8 @@ def main(argv=None):
     params = model.init(jax.random.PRNGKey(args.seed))
     eng = Engine(cfg, params, max_batch=args.max_batch,
                  max_len=args.prompt_len + args.max_new + 2,
-                 temperature=args.temperature, seed=args.seed)
+                 temperature=args.temperature, seed=args.seed,
+                 conv_policy=args.conv_policy)
     rng = np.random.RandomState(args.seed)
     for rid in range(args.requests):
         eng.submit(Request(

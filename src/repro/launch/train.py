@@ -17,6 +17,7 @@ from __future__ import annotations
 
 import argparse
 import time
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -28,6 +29,24 @@ from repro.ft.failures import HeartbeatTable, StragglerDetector
 from repro.models import model as M
 from repro.optim import adamw
 from repro.train import train_step as TS
+
+
+def resolve_conv_policy_args(conv_policy: str | None,
+                             conv_mode: str | None) -> str | None:
+    """Map the CLI pair onto one policy string; --conv-mode is the
+    deprecated uniform spelling and may not be combined with
+    --conv-policy."""
+    if conv_mode is not None:
+        warnings.warn("--conv-mode is deprecated; use --conv-policy "
+                      "(same engine names; per-pass via "
+                      "fwd=...,dgrad=...,wgrad=...)", DeprecationWarning,
+                      stacklevel=2)
+        if conv_policy is not None:
+            raise SystemExit(
+                "pass either --conv-policy or the deprecated --conv-mode, "
+                "not both")
+        return conv_mode
+    return conv_policy
 
 
 def main(argv=None):
@@ -43,11 +62,15 @@ def main(argv=None):
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--conv-policy", default=None,
+                    help="per-pass conv engine policy, e.g. 'auto', "
+                         "'pallas' (uniform) or "
+                         "'fwd=pallas,dgrad=auto,wgrad=bp_phase' "
+                         "(default: cfg.conv_policy)")
     ap.add_argument("--conv-mode", default=None,
                     choices=["lax", "traditional", "bp_im2col", "bp_phase",
                              "pallas"],
-                    help="backprop engine for conv layers (default: "
-                         "cfg.conv_mode)")
+                    help="DEPRECATED: uniform spelling of --conv-policy")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--log-every", type=int, default=10)
@@ -66,7 +89,8 @@ def main(argv=None):
     step_fn = jax.jit(TS.make_train_step(
         cfg, opt_cfg, total_steps=args.steps,
         warmup=max(1, args.steps // 20), accum_steps=args.accum,
-        conv_mode=args.conv_mode))
+        conv_policy=resolve_conv_policy_args(args.conv_policy,
+                                             args.conv_mode)))
 
     start_step = 0
     params = opt_state = None

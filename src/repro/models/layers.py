@@ -5,8 +5,9 @@ leading layer dim for lax.scan), ``*_apply`` consumes them.  Parameter tree
 keys are stable and path-matchable by repro.dist.sharding rules.
 
 Conv layers go through ``repro.core.conv2d`` so their backward pass runs the
-BP-im2col engine selected by ``mode=`` (usually ``cfg.conv_mode``) rather
-than XLA's native conv autodiff.
+BP-im2col engines selected by the per-pass ``policy=`` (usually
+``cfg.conv_policy``) rather than XLA's native conv autodiff.  Geometry is a
+``ConvSpec`` (built from the loose kwargs when not given).
 """
 
 from __future__ import annotations
@@ -15,6 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import conv as C
+from repro.core.convspec import ConvSpec
 
 
 def _maybe_stack(shape, L):
@@ -71,13 +73,26 @@ def init_conv2d(key, c_in: int, c_out: int, k, dtype, groups: int = 1,
     return {"w": (w * fan_in ** -0.5).astype(dtype)}
 
 
-def conv2d_apply(p, x, *, stride: int = 1, padding=0,
-                 mode: str = "bp_phase", groups: int = 1):
-    """x (B, C, H, W) -> (B, N, H_o, W_o) through the selected engine.
+def conv2d_apply(p, x, *, spec: ConvSpec | None = None, policy=None,
+                 stride=None, padding=None, dilation=None, groups=None,
+                 mode=None):
+    """x (B, C, H, W) -> (B, N, H_o, W_o) through the selected engines.
 
-    padding: int, (ph, pw), or ((top, bottom), (left, right)).
+    ``spec`` carries the full geometry; without it the loose kwargs build
+    one (padding: int, (ph, pw), or ((top, bottom), (left, right))).
+    ``policy`` selects the backprop engine per pass (EnginePolicy, policy
+    string, engine name, or None for auto); ``mode=`` is the deprecated
+    uniform spelling.
     """
-    return C.conv2d(x, p["w"].astype(x.dtype), stride, padding, mode, groups)
+    loose = {k: v for k, v in (("stride", stride), ("padding", padding),
+                               ("dilation", dilation), ("groups", groups))
+             if v is not None}
+    if spec is None:
+        spec = ConvSpec.make(**loose)
+    elif loose:
+        raise TypeError(f"geometry given both in spec= and as kwargs "
+                        f"{sorted(loose)}; put it all in the spec")
+    return C.conv2d(x, p["w"].astype(x.dtype), spec, policy, mode=mode)
 
 
 def init_conv1d(key, c_in: int, c_out: int, k: int, dtype, groups: int = 1,
@@ -89,12 +104,12 @@ def init_conv1d(key, c_in: int, c_out: int, k: int, dtype, groups: int = 1,
 
 
 def conv1d_apply(p, x, *, stride: int = 1, padding=0, causal: bool = False,
-                 mode: str = "bp_phase", groups: int = 1):
+                 policy=None, groups: int = 1, mode=None):
     """x (B, C, L) -> (B, N, L_o); causal=True left-pads K-1 (asymmetric)."""
     w = p["w"].astype(x.dtype)
     if causal:
-        return C.conv1d_causal(x, w, mode, groups)
-    return C.conv1d(x, w, stride, padding, mode, groups)
+        return C.conv1d_causal(x, w, policy, groups, mode=mode)
+    return C.conv1d(x, w, stride, padding, policy, groups, mode=mode)
 
 
 # ---------------------------------------------------------------------------

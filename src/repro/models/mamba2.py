@@ -116,7 +116,7 @@ def mamba2_block(p, x, cfg: ArchConfig):
         zxbcdt, [di, 2 * di, 2 * di + ds, 2 * di + 2 * ds], axis=-1)
     conv_in = jnp.concatenate([xs, Bc, Cc], axis=-1)        # (B,L,di+2S)
     conv_out = depthwise_causal_conv1d(conv_in, p["conv_w"]["w"],
-                                       mode=cfg.conv_mode)
+                                       policy=cfg.conv_engine_policy)
     conv_out = jax.nn.silu(conv_out)
     xs, Bc, Cc = jnp.split(conv_out, [di, di + ds], axis=-1)
     dt = jax.nn.softplus(dt.astype(jnp.float32)

@@ -62,7 +62,8 @@ def _rglru_scan(x, r, i, lam):
 def recurrent_block(p, x, cfg: ArchConfig):
     """x (B, L, D) -> (B, L, D), full-sequence."""
     xb = L.linear(p["wx"], x)                                    # (B,L,W)
-    xb = depthwise_causal_conv1d(xb, p["conv_w"]["w"], mode=cfg.conv_mode)
+    xb = depthwise_causal_conv1d(xb, p["conv_w"]["w"],
+                                 policy=cfg.conv_engine_policy)
     r = jax.nn.sigmoid(L.linear(p["wr"], xb).astype(jnp.float32))
     i = jax.nn.sigmoid(L.linear(p["wi"], xb).astype(jnp.float32))
     h = _rglru_scan(xb.astype(jnp.float32), r, i, p["lam"]["w"])

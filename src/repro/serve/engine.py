@@ -38,8 +38,15 @@ class Request:
 class Engine:
     def __init__(self, cfg: ArchConfig, params, max_batch: int = 4,
                  max_len: int = 256, temperature: float = 0.0,
-                 pad_id: int = 0, seed: int = 0):
+                 pad_id: int = 0, seed: int = 0, conv_policy=None):
+        """``conv_policy``: per-pass conv engine override for the decode
+        path (EnginePolicy, policy string, or uniform engine name) --
+        serving can pin e.g. a forward-only engine without touching the
+        training config."""
         assert not cfg.is_encoder_only, "encoder-only archs do not decode"
+        if conv_policy is not None:
+            cfg = dataclasses.replace(cfg, conv_policy=str(conv_policy),
+                                      conv_mode=None)
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch

@@ -10,6 +10,7 @@ suitable for jax.jit with in/out shardings from repro.dist.sharding.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Callable
 
 import jax
@@ -31,17 +32,34 @@ def make_train_step(cfg: ArchConfig, opt_cfg: adamw.AdamWConfig,
                     schedule_name: str | None = None,
                     accum_steps: int = 1,
                     compress_grads: bool = False,
+                    conv_policy=None,
                     conv_mode: str | None = None) -> Callable:
     """compress_grads: int8-quantize gradients with error feedback before
     the optimizer -- models the numerics of a compressed cross-pod gradient
     all-reduce (the EF residual rides in opt_state['ef']).
 
-    conv_mode: override ``cfg.conv_mode`` for every conv layer in the model
-    (the backprop engine knob: lax | traditional | bp_im2col | bp_phase |
-    pallas).  jax.grad inside this step then dispatches conv backward through
-    the selected BP-im2col engine via the conv2d custom_vjp."""
+    conv_policy: override ``cfg.conv_policy`` for every conv layer in the
+    model -- an ``EnginePolicy``, a policy string
+    (``"fwd=pallas,dgrad=auto,wgrad=bp_phase"``), or a uniform engine name.
+    jax.grad inside this step then dispatches each conv pass through the
+    per-pass engines via the conv2d custom_vjp, so one training step can
+    mix engines across forward / input-grad / weight-grad.
+
+    conv_mode: DEPRECATED uniform spelling of the same override."""
     if conv_mode is not None:
-        cfg = dataclasses.replace(cfg, conv_mode=conv_mode)
+        warnings.warn(
+            "make_train_step(conv_mode=...) is deprecated; pass "
+            "conv_policy=<EnginePolicy | policy string | engine name>",
+            DeprecationWarning, stacklevel=2)
+        if conv_policy is not None:
+            raise TypeError("pass either conv_policy= or the deprecated "
+                            "conv_mode=, not both")
+        conv_policy = conv_mode
+    if conv_policy is not None:
+        # conv_mode=None: the override must win even over a cfg that still
+        # sets the deprecated field.
+        cfg = dataclasses.replace(cfg, conv_policy=str(conv_policy),
+                                  conv_mode=None)
     sched_name = schedule_name or schedule.default_schedule_for(cfg.name)
     sched = schedule.SCHEDULES[sched_name]
 

@@ -1,11 +1,13 @@
 """Cross-engine gradient-equivalence matrix for the conv2d custom_vjp.
 
-The system invariant of the paper: for EVERY engine mode, ``jax.grad``
-through ``conv2d(..., mode=m)`` equals ``jax.grad`` through the lax
+The system invariant of the paper: for EVERY engine, ``jax.grad`` through
+``conv2d(..., spec, policy)`` equals ``jax.grad`` through the lax
 reference -- over stride {1, 2, 3}, symmetric and asymmetric padding,
 1x1/3x3/5x5 kernels, grouped / depthwise / 1-D convs, and under jit and
-vmap.  This is what guarantees a training run under any mode follows the
-exact lax trajectory while exercising the BP-im2col datapath.
+vmap.  This is what guarantees a training run under any policy follows the
+exact lax trajectory while exercising the BP-im2col datapath.  Policies
+here are uniform (one engine for all passes); the mixed per-pass matrix
+lives in tests/test_conv_policy.py.
 """
 
 import jax
@@ -14,7 +16,7 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core import (conv1d, conv1d_causal, conv2d,
+from repro.core import (ConvSpec, conv1d, conv1d_causal, conv2d,
                         depthwise_causal_conv1d)
 from repro.core.conv import MODES
 from repro.kernels import ops
@@ -40,25 +42,26 @@ def _data(rng, b=2, c=3, n=4, hi=9, k=3, groups=1):
     return x, w
 
 
-def _grads(mode, stride, pad, groups, x, w):
+def _grads(policy, spec, x, w):
     def loss(x_, w_):
-        y = conv2d(x_, w_, stride, pad, mode, groups)
+        y = conv2d(x_, w_, spec, policy)
         return jnp.sum(y * jnp.cos(0.1 * y))   # nonlinear head: dy != const
     return jax.grad(loss, argnums=(0, 1))(x, w)
 
 
-def _assert_matches_lax(mode, stride, pad, groups, x, w,
+def _assert_matches_lax(policy, stride, pad, groups, x, w,
                         rtol=2e-3, atol=2e-3):
-    want = _grads("lax", stride, pad, groups, x, w)
-    got = _grads(mode, stride, pad, groups, x, w)
+    spec = ConvSpec.make(stride=stride, padding=pad, groups=groups)
+    want = _grads("lax", spec, x, w)
+    got = _grads(policy, spec, x, w)
     for a, b, name in zip(want, got, ("dI", "dW")):
         np.testing.assert_allclose(
             a, b, rtol=rtol, atol=atol,
-            err_msg=f"{mode} s={stride} p={pad} g={groups} {name}")
+            err_msg=f"{policy} s={stride} p={pad} g={groups} {name}")
     np.testing.assert_allclose(
-        conv2d(x, w, stride, pad, mode, groups),
-        conv2d(x, w, stride, pad, "lax", groups),
-        rtol=1e-4, atol=1e-4, err_msg=f"{mode} forward")
+        conv2d(x, w, spec, policy),
+        conv2d(x, w, spec, "lax"),
+        rtol=1e-4, atol=1e-4, err_msg=f"{policy} forward")
 
 
 @pytest.mark.parametrize("mode", ENGINE_MODES)
@@ -114,18 +117,19 @@ def test_depthwise_causal_conv1d_grads(mode, rng):
 def test_jit_and_vmap_compose(mode, rng):
     """jit(grad) and vmap(conv2d) both work through the custom_vjp."""
     x, w = _data(rng)
+    spec = ConvSpec.make(stride=2, padding=1)
     f = jax.jit(lambda x_, w_: jax.grad(
-        lambda a, b: conv2d(a, b, 2, (1, 1), mode).sum(),
+        lambda a, b: conv2d(a, b, spec, mode).sum(),
         argnums=(0, 1))(x_, w_))
-    want = jax.grad(lambda a, b: conv2d(a, b, 2, (1, 1), "lax").sum(),
+    want = jax.grad(lambda a, b: conv2d(a, b, spec, "lax").sum(),
                     argnums=(0, 1))(x, w)
     got = f(x, w)
     for a, b in zip(want, got):
         np.testing.assert_allclose(a, b, rtol=2e-3, atol=2e-3, err_msg=mode)
 
     xs = jnp.stack([x, x + 1])
-    vm = jax.vmap(lambda xx: conv2d(xx, w, 2, (1, 1), mode))(xs)
-    ref = jax.vmap(lambda xx: conv2d(xx, w, 2, (1, 1), "lax"))(xs)
+    vm = jax.vmap(lambda xx: conv2d(xx, w, spec, mode))(xs)
+    ref = jax.vmap(lambda xx: conv2d(xx, w, spec, "lax"))(xs)
     np.testing.assert_allclose(vm, ref, rtol=1e-4, atol=1e-4, err_msg=mode)
 
 
@@ -133,11 +137,12 @@ def test_tile_plan_cache_memoizes(rng):
     """Repeated layer shapes must not re-run VMEM budgeting at trace time."""
     ops.clear_tile_plan_cache()
     x, w = _data(rng)
+    spec = ConvSpec.make(stride=2, padding=1)
     for _ in range(3):
         # fresh jit each time: retrace hits the plan cache, not the planner
-        jax.jit(lambda a, b: conv2d(a, b, 2, (1, 1), "pallas"))(x, w)
+        jax.jit(lambda a, b: conv2d(a, b, spec, "pallas"))(x, w)
         jax.jit(lambda a, b: jax.grad(
-            lambda p, q: conv2d(p, q, 2, (1, 1), "pallas").sum(),
+            lambda p, q: conv2d(p, q, spec, "pallas").sum(),
             argnums=(0, 1))(a, b))(x, w)
     info = ops.tile_plan_cache_info()
     for name in ("forward_plan", "input_grad_plan", "weight_grad_plan"):
@@ -145,8 +150,9 @@ def test_tile_plan_cache_memoizes(rng):
         assert info[name].hits >= 1, (name, info[name])
 
 
-def test_mode_knob_flows_through_train_step():
-    """make_train_step(conv_mode=...) overrides cfg.conv_mode end to end."""
+def test_policy_knob_flows_through_train_step():
+    """make_train_step(conv_policy=...) overrides cfg.conv_policy end to
+    end."""
     from repro.configs import get_smoke_config
     from repro.models import build_model
     from repro.optim import adamw
@@ -158,21 +164,21 @@ def test_mode_knob_flows_through_train_step():
     toks = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0, cfg.vocab)
     batch = {"tokens": toks, "targets": toks}
     losses = {}
-    for mode in ("lax", "bp_phase"):
+    for policy in ("lax", "bp_phase"):
         step = jax.jit(TS.make_train_step(
             cfg, adamw.AdamWConfig(peak_lr=1e-3), total_steps=10, warmup=1,
-            conv_mode=mode))
+            conv_policy=policy))
         _, _, metrics = step(params, opt, batch, jnp.int32(0))
-        losses[mode] = float(metrics["loss"])
+        losses[policy] = float(metrics["loss"])
     assert np.isfinite(list(losses.values())).all()
     np.testing.assert_allclose(losses["lax"], losses["bp_phase"],
                                rtol=1e-4, atol=1e-5)
 
 
-def test_unknown_mode_raises(rng):
+def test_unknown_engine_raises(rng):
     x, w = _data(rng)
-    with pytest.raises(ValueError, match="unknown conv mode"):
-        conv2d(x, w, 1, (0, 0), "nope")
+    with pytest.raises(ValueError, match="unknown conv engine"):
+        conv2d(x, w, ConvSpec.make(), "nope")
 
 
 @pytest.mark.slow

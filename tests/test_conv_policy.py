@@ -1,0 +1,531 @@
+"""ConvSpec / EnginePolicy surface: structured geometry, per-pass engine
+selection, auto-tuning resolution, introspection and the deprecation shim.
+
+Covers the API-redesign invariants:
+  * mixed per-pass policies (three DIFFERENT engines in one backward) match
+    the lax reference, including asymmetric strides and dilations;
+  * ``dispatch_events()`` records the engine ACTUALLY used per pass;
+  * ``policy="auto"`` resolves every pass of every committed
+    ``BENCH_kernels.json`` case onto the Pallas path with zero fallbacks;
+  * the legacy ``mode=`` / ``cfg.conv_mode`` / ``--conv-mode`` spellings
+    keep working, mapped to a uniform policy, with a DeprecationWarning;
+  * ``conv_policy(...)`` context override and ``register_engine()`` hook.
+"""
+
+import json
+import os
+import pathlib
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (ConvSpec, EnginePolicy, conv2d, conv_policy,
+                        dispatch_events, policy_decisions, policy_report,
+                        register_engine, reset_dispatch_events,
+                        resolve_policy, spec_dims)
+from repro.core import conv as C
+from repro.core import im2col_ref
+from repro.core.im2col_ref import ConvDims
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+
+# ---------------------------------------------------------------------------
+# ConvSpec / EnginePolicy objects
+# ---------------------------------------------------------------------------
+
+def test_convspec_normalizes_and_hashes():
+    a = ConvSpec.make(stride=2, padding=1, dilation=1)
+    b = ConvSpec.make(stride=(2, 2), padding=((1, 1), (1, 1)))
+    assert a == b and hash(a) == hash(b)
+    c = ConvSpec.make(stride=(1, 2), padding=(2, 0), dilation=(3, 1))
+    assert (c.s_h, c.s_w) == (1, 2) and (c.d_h, c.d_w) == (3, 1)
+    assert not c.symmetric_stride and c.has_dilation
+    assert c.effective_kernel(3, 3) == (7, 3)
+    with pytest.raises(ValueError):
+        ConvSpec.make(stride=0)
+    with pytest.raises(ValueError):
+        ConvSpec.make(layout="CHWN")
+
+
+def test_engine_policy_parse_and_coerce():
+    p = EnginePolicy.parse("fwd=pallas,dgrad=auto,wgrad=bp_phase")
+    assert (p.forward, p.input_grad, p.weight_grad) == \
+        ("pallas", "auto", "bp_phase")
+    assert EnginePolicy.parse("pallas") == EnginePolicy.uniform("pallas")
+    assert EnginePolicy.coerce(None) == EnginePolicy()          # all-auto
+    assert EnginePolicy.coerce("dgrad=lax").input_grad == "lax"
+    assert EnginePolicy.coerce("dgrad=lax").forward == "auto"
+    assert str(EnginePolicy.uniform("lax")) == "lax"
+    assert EnginePolicy.parse(str(p)) == p                      # round-trip
+    with pytest.raises(ValueError, match="unknown conv pass"):
+        EnginePolicy.parse("sideways=lax")
+    with pytest.raises(ValueError, match="duplicate"):
+        EnginePolicy.parse("fwd=lax,forward=pallas")
+
+
+# ---------------------------------------------------------------------------
+# Mixed per-pass policies: gradient equivalence vs the lax reference
+# ---------------------------------------------------------------------------
+
+MIXED_POLICIES = [
+    "fwd=lax,dgrad=pallas,wgrad=bp_im2col",
+    "fwd=traditional,dgrad=bp_phase,wgrad=pallas",
+    "fwd=pallas,dgrad=bp_im2col,wgrad=traditional",
+]
+
+
+def _mixed_case(rng, spec, policy, rtol=2e-3, atol=2e-3):
+    x = jnp.asarray(rng.randn(2, 3, 9, 11), jnp.float32)
+    w = jnp.asarray(rng.randn(4, 3, 3, 3) * 0.5, jnp.float32)
+
+    def loss(pol):
+        return lambda a, b: jnp.sum(jnp.cos(0.1 * conv2d(a, b, spec, pol)))
+    np.testing.assert_allclose(
+        conv2d(x, w, spec, policy), conv2d(x, w, spec, "lax"),
+        rtol=1e-4, atol=1e-4, err_msg=f"{policy} fwd {spec}")
+    want = jax.grad(loss("lax"), argnums=(0, 1))(x, w)
+    got = jax.grad(loss(policy), argnums=(0, 1))(x, w)
+    for a, b, name in zip(want, got, ("dI", "dW")):
+        np.testing.assert_allclose(a, b, rtol=rtol, atol=atol,
+                                   err_msg=f"{policy} {name} {spec}")
+
+
+@pytest.mark.parametrize("policy", MIXED_POLICIES)
+def test_mixed_policy_grads_match_lax(policy, rng):
+    _mixed_case(rng, ConvSpec.make(stride=2, padding=1), policy)
+    _mixed_case(rng, ConvSpec.make(stride=3, padding=((2, 0), (0, 1))),
+                policy)
+
+
+@pytest.mark.parametrize("spec", [
+    ConvSpec.make(stride=(1, 2), padding=1),
+    ConvSpec.make(stride=(2, 3), padding=((1, 0), (0, 1))),
+    ConvSpec.make(stride=2, padding=(2, 1), dilation=(2, 1)),
+    ConvSpec.make(stride=(1, 2), padding=1, dilation=(1, 2)),
+], ids=str)
+def test_asym_stride_and_dilation_match_lax(spec, rng):
+    """Asymmetric strides / dilations: every policy (auto, uniform implicit
+    engines, mixed with capability-gated slots) still equals lax."""
+    for policy in ("auto", "bp_phase", "traditional",
+                   "fwd=lax,dgrad=pallas,wgrad=bp_im2col"):
+        _mixed_case(rng, spec, policy)
+
+
+def test_lax_reference_matches_native_dilated_conv(rng):
+    """The spec's dilation semantics == lax rhs_dilation (sanity anchor for
+    the kernel-materialization lowering)."""
+    x = jnp.asarray(rng.randn(2, 3, 12, 12), jnp.float32)
+    w = jnp.asarray(rng.randn(4, 3, 3, 3) * 0.5, jnp.float32)
+    spec = ConvSpec.make(stride=(2, 1), padding=((2, 1), (1, 0)),
+                         dilation=(2, 2))
+    want = jax.lax.conv_general_dilated(
+        x, w, (2, 1), [(2, 1), (1, 0)], rhs_dilation=(2, 2),
+        dimension_numbers=("NCHW", "OIHW", "NCHW"))
+    for policy in ("lax", "auto"):
+        np.testing.assert_allclose(conv2d(x, w, spec, policy), want,
+                                   rtol=1e-4, atol=1e-4, err_msg=policy)
+
+
+@pytest.mark.slow
+@settings(max_examples=20, deadline=None)
+@given(
+    hi=st.integers(5, 11), k=st.integers(1, 3),
+    s_h=st.integers(1, 3), s_w=st.integers(1, 3),
+    d_w=st.integers(1, 2),
+    p_lo=st.integers(0, 2), p_hi=st.integers(0, 2),
+    pick=st.integers(0, len(MIXED_POLICIES) - 1),
+    seed=st.integers(0, 2**16),
+)
+def test_property_mixed_policies_match_lax(hi, k, s_h, s_w, d_w, p_lo, p_hi,
+                                           pick, seed):
+    """Property: ANY valid geometry (asymmetric strides, dilation,
+    asymmetric pads) x mixed per-pass policies == lax autodiff.  Slots an
+    engine cannot serve are capability-resolved; the numbers must still
+    match exactly."""
+    keff_w = (k - 1) * d_w + 1
+    if p_lo > keff_w - 1 or p_hi > keff_w - 1:
+        return
+    if hi + p_lo + p_hi < keff_w or hi + p_lo + p_hi < k:
+        return
+    spec = ConvSpec.make(stride=(s_h, s_w), dilation=(1, d_w),
+                         padding=((p_lo, p_hi), (p_hi, p_lo)))
+    d = spec_dims((2, 2, hi, hi), (3, 2, k, k), spec)
+    if d.H_o < 1 or d.W_o < 1:
+        return
+    try:
+        d.validate()
+    except AssertionError:
+        return                      # outside every implicit engine: skip
+    r = np.random.RandomState(seed)
+    x = jnp.asarray(r.randn(2, 2, hi, hi), jnp.float32)
+    w = jnp.asarray(r.randn(3, 2, k, k) * 0.5, jnp.float32)
+
+    def loss(pol):
+        return lambda a, b: jnp.sum(jnp.sin(conv2d(a, b, spec, pol)))
+    want = jax.grad(loss("lax"), argnums=(0, 1))(x, w)
+    for policy in ("auto", MIXED_POLICIES[pick]):
+        got = jax.grad(loss(policy), argnums=(0, 1))(x, w)
+        for a, b, name in zip(want, got, ("dI", "dW")):
+            np.testing.assert_allclose(
+                a, b, rtol=5e-3, atol=5e-3,
+                err_msg=f"{policy} {name} {spec}")
+
+
+# ---------------------------------------------------------------------------
+# Introspection: the engine actually used, per pass
+# ---------------------------------------------------------------------------
+
+def test_training_step_runs_three_different_engines(rng):
+    """One jitted training step under a mixed policy: forward, input-grad
+    and weight-grad each dispatch a DIFFERENT engine, and dispatch_events()
+    records exactly which."""
+    x = jnp.asarray(rng.randn(4, 3, 12, 12), jnp.float32)
+    y = jnp.asarray(rng.randint(0, 4, 4), jnp.int32)
+    params = {"w1": jnp.asarray(rng.randn(8, 3, 3, 3) * 0.2, jnp.float32),
+              "w2": jnp.asarray(rng.randn(4, 8, 3, 3) * 0.2, jnp.float32)}
+    spec = ConvSpec.make(stride=2, padding=1)
+    policy = EnginePolicy(forward="lax", input_grad="pallas",
+                          weight_grad="bp_im2col")
+
+    def loss_fn(p):
+        h = jax.nn.relu(conv2d(x, p["w1"], spec, policy))
+        logits = conv2d(h, p["w2"], spec, policy).mean((2, 3))
+        return -jnp.take_along_axis(jax.nn.log_softmax(logits),
+                                    y[:, None], 1).mean()
+
+    reset_dispatch_events()
+    step = jax.jit(jax.value_and_grad(loss_fn))
+    loss0, grads = step(params)
+    params2 = jax.tree.map(lambda p, g: p - 0.1 * g, params, grads)
+    loss1, _ = step(params2)
+    assert float(loss1) < float(loss0)          # it actually trains
+    ev = dispatch_events()
+    assert ev.get("forward:lax", 0) >= 2        # two conv layers
+    assert ev.get("input_grad:pallas", 0) >= 2
+    assert ev.get("weight_grad:bp_im2col", 0) >= 2
+    # No pass leaked onto an engine the policy did not name.
+    assert not any(k.startswith("forward:") and k != "forward:lax"
+                   for k in ev), ev
+    assert not any(k.startswith("input_grad:") and k != "input_grad:pallas"
+                   for k in ev), ev
+    assert not any(k.startswith("weight_grad:")
+                   and k != "weight_grad:bp_im2col" for k in ev), ev
+
+
+def test_train_step_threads_mixed_policy_to_dispatch():
+    """make_train_step(conv_policy=<mixed>) reaches the conv dispatch: the
+    model's depthwise temporal convs record the three per-pass engines."""
+    from repro.configs import get_smoke_config
+    from repro.models import build_model
+    from repro.optim import adamw
+    from repro.train import train_step as TS
+    cfg = get_smoke_config("mamba2_370m")
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    opt = adamw.init_state(params)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0, cfg.vocab)
+    batch = {"tokens": toks, "targets": toks}
+    reset_dispatch_events()
+    step = jax.jit(TS.make_train_step(
+        cfg, adamw.AdamWConfig(peak_lr=1e-3), total_steps=10, warmup=1,
+        conv_policy="fwd=lax,dgrad=bp_phase,wgrad=bp_im2col"))
+    _, _, metrics = step(params, opt, batch, jnp.int32(0))
+    assert np.isfinite(float(metrics["loss"]))
+    ev = dispatch_events()
+    assert ev.get("forward:lax", 0) >= 1, ev
+    assert ev.get("input_grad:bp_phase", 0) >= 1, ev
+    assert ev.get("weight_grad:bp_im2col", 0) >= 1, ev
+
+
+def test_fallback_reasons_are_recorded(rng):
+    """A capability-gated slot (pallas on an asymmetric stride) resolves to
+    a capable engine AND records why."""
+    x = jnp.asarray(rng.randn(1, 2, 8, 8), jnp.float32)
+    w = jnp.asarray(rng.randn(2, 2, 3, 3), jnp.float32)
+    spec = ConvSpec.make(stride=(1, 2), padding=1)
+    reset_dispatch_events()
+    conv2d(x, w, spec, "pallas")
+    ev = dispatch_events()
+    assert ev.get("forward:bp_phase", 0) >= 1, ev       # gated off pallas
+    decs = [d for d in policy_decisions()
+            if d["pass"] == "forward" and d["requested"] == "pallas"]
+    assert decs and "asymmetric stride" in decs[0]["reason"], decs
+
+
+def test_auto_policy_on_committed_bench_cases_is_all_pallas():
+    """Acceptance: policy='auto' selects the Pallas path with zero
+    fallbacks on every BENCH_kernels.json case."""
+    with open(REPO / "BENCH_kernels.json") as f:
+        record = json.load(f)
+    assert record["cases"], "empty benchmark baseline"
+    for case in record["cases"]:
+        dm = case["dims"]
+        d = ConvDims(B=dm["B"], C=dm["C"], H_i=dm["H_i"], W_i=dm["W_i"],
+                     N=dm["N"], K_h=dm["K_h"], K_w=dm["K_w"], S=dm["S"],
+                     P_h=dm["P_h"], P_w=dm["P_w"])
+        res = resolve_policy(d, "auto")
+        for pass_name, info in res.items():
+            assert info["engine"] == "pallas", (dm, pass_name, info)
+
+
+def test_auto_prefers_native_path_at_stride_1():
+    """The shape-dependent rule: stride 1 has no zero-space, so auto stays
+    on the dense native path instead of paying the Pallas dispatch."""
+    d = ConvDims(B=2, C=8, H_i=16, W_i=16, N=8, K_h=3, K_w=3, S=1,
+                 P_h=1, P_w=1)
+    res = resolve_policy(d, "auto")
+    assert all(v["engine"] == "bp_phase" for v in res.values()), res
+
+
+def test_empty_output_plane_raises_for_every_engine(rng):
+    """A mis-sized layer (effective kernel larger than the padded input)
+    fails at trace time with a clear message instead of training on empty
+    activations -- for lax too, not just the implicit engines."""
+    x = jnp.asarray(rng.randn(1, 2, 8, 8), jnp.float32)
+    w = jnp.asarray(rng.randn(3, 2, 3, 3), jnp.float32)
+    spec = ConvSpec.make(stride=2, padding=0, dilation=4)   # K_eff = 9 > 8
+    for policy in ("lax", "bp_phase", "auto"):
+        with pytest.raises(ValueError, match="output plane is empty"):
+            conv2d(x, w, spec, policy)
+
+
+def test_conv_plan_report_asym_stride_degrades_gracefully():
+    from repro.core.conv import conv_plan_report
+    rep = conv_plan_report((2, 4, 12, 12), (8, 4, 3, 3), stride=(1, 2),
+                           padding=1)
+    assert rep == {"pallas_path": False, "reason": "asymmetric stride"}
+    assert conv_plan_report((2, 4, 12, 12), (8, 4, 3, 3), stride=2,
+                            padding=1)["pallas_path"] is True
+
+
+def test_policy_report_shapes():
+    rep = policy_report((2, 16, 32, 32), (32, 16, 3, 3),
+                        ConvSpec.make(stride=2, padding=1), "auto")
+    assert rep["pallas_path"] is True
+    assert rep["plan"]["pallas_path"] is True
+    rep2 = policy_report((2, 16, 32, 32), (32, 16, 3, 3),
+                         ConvSpec.make(stride=(1, 2), padding=1), "auto")
+    assert rep2["pallas_path"] is False
+    assert rep2["plan"]["reason"] == "asymmetric stride"
+
+
+# ---------------------------------------------------------------------------
+# conv_policy context manager + register_engine hook
+# ---------------------------------------------------------------------------
+
+def test_conv_policy_context_overrides_everything(rng):
+    x = jnp.asarray(rng.randn(1, 2, 8, 8), jnp.float32)
+    w = jnp.asarray(rng.randn(2, 2, 3, 3), jnp.float32)
+    spec = ConvSpec.make(stride=2, padding=1)
+    reset_dispatch_events()
+    with conv_policy("traditional"):
+        conv2d(x, w, spec, "pallas")        # override beats the per-call
+        with conv_policy("dgrad=lax"):      # innermost wins (others auto)
+            jax.grad(lambda a: conv2d(a, w, spec, "pallas").sum())(x)
+    ev = dispatch_events()
+    assert ev.get("forward:traditional", 0) >= 1, ev
+    assert ev.get("input_grad:lax", 0) >= 1, ev
+    assert ev.get("input_grad:pallas", 0) == 0, ev
+    # ...and the override is gone afterwards.
+    reset_dispatch_events()
+    conv2d(x, w, spec, "pallas")
+    assert dispatch_events().get("forward:pallas", 0) >= 1
+
+
+def test_register_engine_hook(rng):
+    """A user engine registered at runtime is selectable per pass and shows
+    up in the dispatch introspection."""
+    calls = {"n": 0}
+
+    def counting_forward(x, w, d):
+        calls["n"] += 1
+        return im2col_ref.conv2d_lax(x, w, d)
+
+    name = "counting_lax"
+    if name not in C.ENGINES:
+        register_engine(name, counting_forward,
+                        C._lax_input_grad, C._lax_weight_grad,
+                        asym_stride=True, paper_geometry=False)
+    with pytest.raises(ValueError, match="already registered"):
+        register_engine(name, counting_forward, C._lax_input_grad,
+                        C._lax_weight_grad)
+    x = jnp.asarray(rng.randn(1, 2, 8, 8), jnp.float32)
+    w = jnp.asarray(rng.randn(2, 2, 3, 3), jnp.float32)
+    spec = ConvSpec.make(stride=2, padding=1)
+    reset_dispatch_events()
+    got = conv2d(x, w, spec, f"fwd={name},dgrad=auto,wgrad=auto")
+    np.testing.assert_allclose(got, conv2d(x, w, spec, "lax"),
+                               rtol=1e-4, atol=1e-4)
+    assert calls["n"] >= 1
+    assert dispatch_events().get(f"forward:{name}", 0) >= 1
+
+
+def test_nhwc_layout(rng):
+    x = jnp.asarray(rng.randn(2, 3, 10, 10), jnp.float32)
+    w = jnp.asarray(rng.randn(4, 3, 3, 3) * 0.5, jnp.float32)
+    want = conv2d(x, w, ConvSpec.make(stride=2, padding=1), "lax")
+    xn = jnp.transpose(x, (0, 2, 3, 1))
+    spec = ConvSpec.make(stride=2, padding=1, layout="NHWC")
+    for policy in ("bp_phase", "pallas"):
+        yn = conv2d(xn, w, spec, policy)
+        np.testing.assert_allclose(jnp.transpose(yn, (0, 3, 1, 2)), want,
+                                   rtol=1e-4, atol=1e-4, err_msg=policy)
+    # gradients flow through the boundary transposes
+    g = jax.grad(lambda a: conv2d(a, w, spec, "bp_phase").sum())(xn)
+    g_ref = jax.grad(lambda a: conv2d(
+        a, w, ConvSpec.make(stride=2, padding=1), "lax").sum())(x)
+    np.testing.assert_allclose(jnp.transpose(g, (0, 3, 1, 2)), g_ref,
+                               rtol=2e-3, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# Backward-compat shim (mode= / cfg.conv_mode / --conv-mode)
+# ---------------------------------------------------------------------------
+
+def test_legacy_mode_kwarg_warns_and_matches(rng):
+    x = jnp.asarray(rng.randn(1, 3, 9, 9), jnp.float32)
+    w = jnp.asarray(rng.randn(4, 3, 3, 3) * 0.5, jnp.float32)
+    want = conv2d(x, w, ConvSpec.make(stride=2, padding=1), "bp_phase")
+    with pytest.warns(DeprecationWarning, match="mode=.* deprecated"):
+        got_kw = conv2d(x, w, stride=2, padding=(1, 1), mode="bp_phase")
+    with pytest.warns(DeprecationWarning):
+        got_pos = conv2d(x, w, 2, (1, 1), "bp_phase")   # legacy positional
+    np.testing.assert_allclose(got_kw, want, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(got_pos, want, rtol=1e-5, atol=1e-6)
+    # Loose geometry kwargs WITHOUT mode are non-deprecated sugar.
+    import warnings as W
+    with W.catch_warnings():
+        W.simplefilter("error", DeprecationWarning)
+        got_sugar = conv2d(x, w, stride=2, padding=1, groups=1)
+    np.testing.assert_allclose(got_sugar, want, rtol=1e-5, atol=1e-6)
+    with pytest.raises(TypeError, match="not both"):
+        conv2d(x, w, stride=2, padding=1, mode="lax", policy="lax")
+
+
+def test_legacy_1d_mode_kwarg_warns(rng):
+    x = jnp.asarray(rng.randn(2, 4, 12), jnp.float32)
+    w = jnp.asarray(rng.randn(3, 4, 3) * 0.5, jnp.float32)
+    from repro.core import conv1d
+    with pytest.warns(DeprecationWarning):
+        got = conv1d(x, w, 2, 1, mode="bp_phase")
+    np.testing.assert_allclose(got, conv1d(x, w, 2, 1, "bp_phase"),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_legacy_cfg_conv_mode_warns():
+    import dataclasses
+    from repro.configs import get_smoke_config
+    cfg = dataclasses.replace(get_smoke_config("mamba2_370m"),
+                              conv_mode="bp_phase")
+    with pytest.warns(DeprecationWarning, match="conv_mode is deprecated"):
+        assert cfg.conv_engine_policy == "bp_phase"
+    cfg2 = get_smoke_config("mamba2_370m")
+    assert cfg2.conv_mode is None
+    assert cfg2.conv_engine_policy == cfg2.conv_policy == "auto"
+
+
+def test_legacy_train_step_conv_mode_warns():
+    from repro.configs import get_smoke_config
+    from repro.optim import adamw
+    from repro.train import train_step as TS
+    cfg = get_smoke_config("mamba2_370m")
+    with pytest.warns(DeprecationWarning, match="conv_mode=.* deprecated"):
+        TS.make_train_step(cfg, adamw.AdamWConfig(peak_lr=1e-3),
+                           total_steps=2, warmup=1, conv_mode="bp_phase")
+    with pytest.raises(TypeError, match="not both"):
+        with pytest.warns(DeprecationWarning):
+            TS.make_train_step(cfg, adamw.AdamWConfig(peak_lr=1e-3),
+                               total_steps=2, warmup=1,
+                               conv_mode="bp_phase", conv_policy="auto")
+
+
+def test_legacy_cli_conv_mode_maps_and_warns():
+    from repro.launch.train import resolve_conv_policy_args
+    with pytest.warns(DeprecationWarning, match="--conv-mode is deprecated"):
+        assert resolve_conv_policy_args(None, "pallas") == "pallas"
+    assert resolve_conv_policy_args("fwd=lax,dgrad=auto,wgrad=auto",
+                                    None) == "fwd=lax,dgrad=auto,wgrad=auto"
+    with pytest.raises(SystemExit):
+        with pytest.warns(DeprecationWarning):
+            resolve_conv_policy_args("auto", "pallas")
+
+
+# ---------------------------------------------------------------------------
+# Environment / repo-hygiene gates
+# ---------------------------------------------------------------------------
+
+def test_interpret_env_var_override():
+    """BPIM2COL_INTERPRET=0 flips repro.kernels.ops.INTERPRET without a
+    code edit (the ROADMAP 'flip on real TPU' item)."""
+    code = ("import repro.kernels.ops as o; "
+            "import sys; sys.stdout.write(str(o.INTERPRET))")
+    env = dict(os.environ,
+               PYTHONPATH=str(REPO / "src") + os.pathsep
+               + os.environ.get("PYTHONPATH", ""))
+    for val, want in (("0", "False"), ("false", "False"), ("1", "True"),
+                      (None, "True")):
+        e = dict(env)
+        e.pop("BPIM2COL_INTERPRET", None)
+        if val is not None:
+            e["BPIM2COL_INTERPRET"] = val
+        out = subprocess.run([sys.executable, "-c", code], env=e,
+                             capture_output=True, text=True, check=True)
+        assert out.stdout == want, (val, out.stdout)
+
+
+def test_no_raw_mode_strings_outside_shim():
+    """Grep-lint: internal call sites must use the structured surface."""
+    out = subprocess.run(
+        [sys.executable, str(REPO / "scripts" / "check_no_raw_mode.py"),
+         str(REPO)],
+        capture_output=True, text=True)
+    assert out.returncode == 0, out.stderr or out.stdout
+
+
+def test_bench_compare_detects_regressions():
+    """The --compare gate: slowdown > tolerance or a pallas-path loss in a
+    new record vs the baseline record fails."""
+    sys.path.insert(0, str(REPO / "benchmarks"))
+    try:
+        import bench_kernels as BK
+    finally:
+        sys.path.pop(0)
+    dims = {"B": 1, "C": 4, "H_i": 12, "W_i": 12, "N": 8, "K_h": 3,
+            "K_w": 3, "S": 2, "P_h": 1, "P_w": 1}
+    base = {"cases": [{
+        "dims": dims, "fits": True,
+        "timings_us": {"case": "t", "grad_auto_us": 100.0},
+        "auto_policy": {"forward": "pallas", "input_grad": "pallas",
+                        "weight_grad": "pallas"}}]}
+    ok = {"cases": [{
+        "dims": dims, "fits": True,
+        "timings_us": {"case": "t", "grad_auto_us": 110.0},
+        "auto_policy": {"forward": "pallas", "input_grad": "pallas",
+                        "weight_grad": "pallas"}}]}
+    assert BK.compare_records(ok, base, tolerance=0.15) == []
+    slow = {"cases": [{**ok["cases"][0],
+                       "timings_us": {"case": "t", "grad_auto_us": 130.0}}]}
+    assert any("grad_auto_us" in p
+               for p in BK.compare_records(slow, base, tolerance=0.15))
+    unfit = {"cases": [{**ok["cases"][0], "fits": False,
+                        "auto_policy": {"forward": "bp_phase",
+                                        "input_grad": "pallas",
+                                        "weight_grad": "pallas"}}]}
+    problems = BK.compare_records(unfit, base, tolerance=0.15)
+    assert any("Pallas path" in p for p in problems), problems
+    assert any("auto policy regressed" in p for p in problems), problems
+    # A dropped/renamed timing column must not pass vacuously.
+    dropped = {"cases": [{**ok["cases"][0],
+                          "timings_us": {"case": "t"}}]}
+    assert any("missing from the new record" in p
+               for p in BK.compare_records(dropped, base, tolerance=0.15))
+    # Nor may dropping a whole benchmark case.
+    assert any("case" in p and "missing" in p
+               for p in BK.compare_records({"cases": []}, base,
+                                           tolerance=0.15))

@@ -1,4 +1,4 @@
-"""End-to-end system tests: training drivers, conv-mode training, serving,
+"""End-to-end system tests: training drivers, conv-policy training, serving,
 checkpoint-resume equivalence."""
 
 import jax
@@ -7,24 +7,26 @@ import numpy as np
 import pytest
 
 from repro.configs import get_smoke_config
-from repro.core import conv2d
+from repro.core import ConvSpec, conv2d
 from repro.launch import train as train_launcher
 from repro.models import build_model
 from repro.serve.engine import Engine, Request
 
 
-def test_cnn_trains_with_bp_im2col_modes():
+def test_cnn_trains_with_bp_im2col_policies():
     """A small strided CNN classifier trains (loss decreases) under every
-    backprop engine, and engines agree step-by-step."""
+    backprop engine policy -- uniform AND mixed per-pass -- and all agree
+    with lax step-by-step."""
     rng = np.random.RandomState(0)
     x = jnp.asarray(rng.randn(8, 3, 12, 12), jnp.float32)
     y = jnp.asarray(rng.randint(0, 4, 8), jnp.int32)
+    spec = ConvSpec.make(stride=2, padding=1)
 
-    def make_loss(mode):
+    def make_loss(policy):
         def loss_fn(params):
-            h = conv2d(x, params["w1"], 2, (1, 1), mode)           # (8,8,6,6)
+            h = conv2d(x, params["w1"], spec, policy)              # (8,8,6,6)
             h = jax.nn.relu(h)
-            h = conv2d(h, params["w2"], 2, (1, 1), mode)           # (8,4,3,3)
+            h = conv2d(h, params["w2"], spec, policy)              # (8,4,3,3)
             logits = h.mean((2, 3))
             logp = jax.nn.log_softmax(logits)
             return -jnp.take_along_axis(logp, y[:, None], 1).mean()
@@ -33,19 +35,21 @@ def test_cnn_trains_with_bp_im2col_modes():
     params0 = {"w1": jnp.asarray(rng.randn(8, 3, 3, 3) * 0.2, jnp.float32),
                "w2": jnp.asarray(rng.randn(4, 8, 3, 3) * 0.2, jnp.float32)}
     histories = {}
-    for mode in ("lax", "traditional", "bp_im2col", "bp_phase"):
+    policies = ("lax", "traditional", "bp_im2col", "bp_phase",
+                "fwd=lax,dgrad=bp_phase,wgrad=bp_im2col")
+    for policy in policies:
         params = dict(params0)
-        loss_fn = jax.jit(jax.value_and_grad(make_loss(mode)))
+        loss_fn = jax.jit(jax.value_and_grad(make_loss(policy)))
         hist = []
         for _ in range(20):
             l, g = loss_fn(params)
             params = jax.tree.map(lambda p, gg: p - 0.1 * gg, params, g)
             hist.append(float(l))
-        histories[mode] = hist
-        assert hist[-1] < hist[0], f"{mode} failed to descend"
-    for mode in ("traditional", "bp_im2col", "bp_phase"):
-        np.testing.assert_allclose(histories["lax"], histories[mode],
-                                   rtol=1e-3, atol=1e-3, err_msg=mode)
+        histories[policy] = hist
+        assert hist[-1] < hist[0], f"{policy} failed to descend"
+    for policy in policies[1:]:
+        np.testing.assert_allclose(histories["lax"], histories[policy],
+                                   rtol=1e-3, atol=1e-3, err_msg=policy)
 
 
 def test_train_launcher_loss_decreases(tmp_path):
