@@ -21,13 +21,20 @@ the hardware-independent quantities -- they are what future TPU runs
 ``--tiny`` runs one small shape with 1 rep (the CI smoke lane) and FAILS if
 any case falls off the Pallas path: a tile-plan fallback counter > 0 OR the
 ``auto`` policy resolving any pass of any tiny case to a non-pallas engine.
-``--json`` writes the machine-readable record: per-case wall-clock,
-bytes-moved ratios, tile plans (fits / spatial splits / VMEM footprint),
-per-pass auto-policy resolution, and the planner's hit/fallback event
-counts.  The committed ``BENCH_kernels.json`` is the perf baseline.
-``--compare PATH`` re-runs the bench and exits non-zero if any shared
-timing column slowed down by more than ``--tolerance`` (default 15%) or
-any case that previously stayed on the Pallas path now falls back.
+``--json`` writes the machine-readable record (schema 3): per-case
+wall-clock, bytes-moved ratios, tile plans (fits / spatial splits / VMEM
+footprint), per-pass auto-policy resolution, the per-case tap counts
+(``taps.real`` vs ``taps.materialized`` -- the dilated case's skip_ratio
+shows the ~1/(d_h*d_w) zero-skipping), and the planner's hit/fallback
+event counts.  The case list includes an asymmetric-stride (2, 3) layer
+and a dilated (d=2) layer, both of which the per-axis tap tables keep on
+the Pallas path.  The committed ``BENCH_kernels.json`` is the perf
+baseline.  ``--compare PATH`` re-runs the bench and exits non-zero if any
+shared timing column slowed down by more than ``--tolerance`` (default
+35%, re-measured once so only REPRODUCED slowdowns fail -- interpret-mode
+CPU wall-clock is long-tailed), any case that previously stayed on the
+Pallas path now falls back, or a case's Pallas tap count grew
+(zero-skipping regressed).
 """
 
 from __future__ import annotations
@@ -56,6 +63,14 @@ CASES = [
     # had to prove the WHOLE plane fits VMEM to stay on the Pallas path.
     ConvDims(B=1, C=128, H_i=56, W_i=56, N=128, K_h=3, K_w=3, S=2,
              P_h=1, P_w=1),
+    # Asymmetric stride (2, 3): per-axis tap tables keep it on the Pallas
+    # path (pre-PR-4 this was capability-gated onto bp_phase).
+    ConvDims(B=2, C=16, H_i=32, W_i=24, N=32, K_h=3, K_w=3, S=2, S_w=3,
+             P_h=1, P_w=1),
+    # Dilated 3x3 (d=2, effective extent 5): the tap table skips the zero
+    # taps, so the Pallas GEMMs run 9 taps, not the materialized 25.
+    ConvDims(B=2, C=16, H_i=32, W_i=32, N=32, K_h=5, K_w=5, S=2,
+             P_h=2, P_w=2, D_h=2, D_w=2),
 ]
 
 TINY_CASES = [
@@ -76,16 +91,23 @@ GRAD_POLICIES = (
 
 
 def _t(fn, *args, reps=5):
+    """Best-of-``reps`` wall-clock in us (min is the standard
+    noise-robust microbenchmark statistic: load spikes on a shared CPU
+    only ever INFLATE a sample, so the minimum tracks the true cost and
+    keeps the --compare gate from tripping on scheduler noise)."""
     jax.block_until_ready(fn(*args))
-    t0 = time.perf_counter()
+    best = float("inf")
     for _ in range(reps):
+        t0 = time.perf_counter()
         jax.block_until_ready(fn(*args))
-    return (time.perf_counter() - t0) / reps * 1e6
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
 
 
 def _spec(d: ConvDims) -> ConvSpec:
     return ConvSpec.make(stride=(d.s_h, d.s_w),
-                         padding=((d.P_h, d.p_h_hi), (d.P_w, d.p_w_hi)))
+                         padding=((d.P_h, d.p_h_hi), (d.P_w, d.p_w_hi)),
+                         dilation=(d.D_h, d.D_w))
 
 
 def _grad_fn(d: ConvDims, policy: str):
@@ -121,17 +143,25 @@ def run(csv=True, cases=None, reps=5, grad_policies=GRAD_POLICIES):
     rows = []
     for d in cases or CASES:
         x = jnp.asarray(rng.randn(d.B, d.C, d.H_i, d.W_i), jnp.float32)
-        w = jnp.asarray(rng.randn(d.N, d.C, d.K_h, d.K_w), jnp.float32)
+        # The Pallas engine (and the end-to-end conv2d surface) take the
+        # COMPACT kernel; the materializing engines take the zero-dilated
+        # effective kernel -- identical arrays when the case is undilated.
+        w = jnp.asarray(rng.randn(d.N, d.C, d.k_taps_h, d.k_taps_w),
+                        jnp.float32)
+        w_eff = im2col_ref.zero_insert(w, (d.D_h, d.D_w)) \
+            if d.has_dilation else w
         dy = jnp.asarray(rng.randn(d.B, d.N, d.H_o, d.W_o), jnp.float32)
-        t_trad = _t(jax.jit(lambda a, b: im2col_ref.input_grad_explicit(a, b, d)), dy, w, reps=reps)
-        t_bp = _t(jax.jit(lambda a, b: bpim2col.input_grad_implicit(a, b, d)), dy, w, reps=reps)
-        t_ph = _t(jax.jit(lambda a, b: phase_decomp.input_grad_phase(a, b, d)), dy, w, reps=reps)
+        t_trad = _t(jax.jit(lambda a, b: im2col_ref.input_grad_explicit(a, b, d)), dy, w_eff, reps=reps)
+        t_bp = _t(jax.jit(lambda a, b: bpim2col.input_grad_implicit(a, b, d)), dy, w_eff, reps=reps)
+        t_ph = _t(jax.jit(lambda a, b: phase_decomp.input_grad_phase(a, b, d)), dy, w_eff, reps=reps)
         t_pl = _t(jax.jit(lambda a, b: ops.conv2d_input_grad(a, b, d)), dy, w, reps=reps)
         tg_trad = _t(jax.jit(lambda a, b: im2col_ref.weight_grad_explicit(a, b, d)), x, dy, reps=reps)
         tg_ph = _t(jax.jit(lambda a, b: phase_decomp.weight_grad_phase(a, b, d)), x, dy, reps=reps)
         tg_pl = _t(jax.jit(lambda a, b: ops.conv2d_weight_grad(a, b, d)), x, dy, reps=reps)
+        dil = f"/d{d.D_h}x{d.D_w}" if d.has_dilation else ""
         row = {
-            "case": f"{d.H_i}/{d.C}/{d.N}/{d.K_h}/{d.S}/{d.P_h}",
+            "case": f"{d.H_i}/{d.C}/{d.N}/{d.K_h}/{d.s_h}x{d.s_w}/"
+                    f"{d.P_h}{dil}",
             "dI_trad_us": round(t_trad, 1),
             "dI_bp_gather_us": round(t_bp, 1),
             "dI_phase_us": round(t_ph, 1),
@@ -168,13 +198,20 @@ def _json_record(rows, cases) -> dict:
     for d, row in zip(cases, rows):
         plan = ops.plan_report(d)
         auto = _auto_resolution(d)
+        real = plan["kernel_taps"]["real"]
+        materialized = plan["kernel_taps"]["materialized"]
         record_cases.append({
             "dims": {"B": d.B, "C": d.C, "H_i": d.H_i, "W_i": d.W_i,
                      "N": d.N, "K_h": d.K_h, "K_w": d.K_w, "S": d.S,
+                     "S_w": d.S_w, "D_h": d.D_h, "D_w": d.D_w,
                      "P_h": d.P_h, "P_w": d.P_w},
             "timings_us": row,
             "bytes_moved": _bytes_moved(d),
             "plan": plan,
+            # Zero-skipping dilation: the tap count the Pallas GEMMs run
+            # vs what the kernel-materialization lowering would run.
+            "taps": {"real": real, "materialized": materialized,
+                     "skip_ratio": round(real / materialized, 3)},
             "auto_policy": auto,
             "auto_all_pallas": all(e == "pallas" for e in auto.values()),
             "fits": plan["pallas_path"],
@@ -185,7 +222,7 @@ def _json_record(rows, cases) -> dict:
     fallbacks = sum(v for k, v in events.items() if k.endswith("_fallback"))
     return {
         "bench": "bench_kernels",
-        "schema": 2,
+        "schema": 3,
         "vmem_budget_bytes": ops.VMEM_BUDGET_BYTES,
         "interpret": ops.INTERPRET,
         "cases": record_cases,
@@ -202,7 +239,7 @@ def _case_key(case: dict) -> tuple:
 
 
 def compare_records(record: dict, baseline: dict,
-                    tolerance: float = 0.15) -> list[str]:
+                    tolerance: float = 0.35) -> list[str]:
     """Regressions of ``record`` vs ``baseline``: any shared timing column
     slower by > tolerance, any case leaving the Pallas path, and any pass
     the auto policy used to place on pallas but no longer does."""
@@ -239,6 +276,13 @@ def compare_records(record: dict, baseline: dict,
         if b.get("fits") and not c.get("fits"):
             problems.append(f"{name}: tile plan regressed off the Pallas "
                             "path (fits: true -> false)")
+        base_taps, new_taps = b.get("taps"), c.get("taps")
+        if base_taps and new_taps and new_taps["real"] > base_taps["real"]:
+            # More taps than the baseline means the dilation zero-skipping
+            # (or the per-axis table) regressed to a denser enumeration.
+            problems.append(
+                f"{name}: Pallas tap count regressed "
+                f"{base_taps['real']} -> {new_taps['real']}")
         base_auto = b.get("auto_policy", {})
         for pass_name, engine in c.get("auto_policy", {}).items():
             if base_auto.get(pass_name) == "pallas" and engine != "pallas":
@@ -258,11 +302,15 @@ def main():
                     help="exit non-zero on regression vs this baseline "
                          "record (slowdown > --tolerance, or a case "
                          "falling off the Pallas path)")
-    ap.add_argument("--tolerance", type=float, default=0.15,
-                    help="allowed per-column slowdown for --compare")
+    ap.add_argument("--tolerance", type=float, default=0.35,
+                    help="allowed per-column slowdown for --compare.  The "
+                         "default absorbs interpret-mode CPU wall-clock "
+                         "bimodality (the structural gates -- Pallas path, "
+                         "auto policy, tap counts -- are tolerance-free); "
+                         "tighten it for real-TPU comparisons")
     args = ap.parse_args()
     cases = TINY_CASES if args.tiny else CASES
-    reps = 1 if args.tiny else 5
+    reps = 1 if args.tiny else 10
     ops.clear_tile_plan_cache()
     ops.reset_plan_events()
     rows = run(cases=cases, reps=reps)
@@ -293,6 +341,20 @@ def main():
         with open(args.compare) as f:
             baseline = json.load(f)
         problems = compare_records(record, baseline, args.tolerance)
+        if problems:
+            # CPU wall-clock is long-tailed on shared machines: re-measure
+            # once and keep only the findings that REPRODUCE (a structural
+            # regression -- Pallas path, auto policy, tap count -- always
+            # does; a scheduler hiccup does not).
+            ops.clear_tile_plan_cache()
+            ops.reset_plan_events()
+            record2 = _json_record(run(csv=False, cases=cases, reps=reps),
+                                   cases)
+            keys2 = {p.split(":", 1)[0]
+                     for p in compare_records(record2, baseline,
+                                              args.tolerance)}
+            problems = [p for p in problems
+                        if p.split(":", 1)[0] in keys2]
         if problems:
             print("PERF REGRESSION vs " + args.compare, file=sys.stderr)
             for p in problems:

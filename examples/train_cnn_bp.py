@@ -80,12 +80,15 @@ def synthetic_task(rng, n, classes=4):
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--policy", default=None,
-                    help="engine policy: uniform name, 'auto', or "
-                         "fwd=...,dgrad=...,wgrad=... (default bp_phase)")
+                    help="engine policy: a uniform engine name, 'auto' "
+                         "(per-pass shape-dependent selection), or a "
+                         "per-pass string fwd=...,dgrad=...,wgrad=... "
+                         "(default bp_phase)")
     ap.add_argument("--mode", default=None,
                     choices=["lax", "traditional", "bp_im2col", "bp_phase",
                              "pallas"],
-                    help="DEPRECATED: uniform spelling of --policy")
+                    help="DEPRECATED compatibility alias: maps to a "
+                         "uniform --policy and warns; use --policy")
     ap.add_argument("--steps", type=int, default=200)
     ap.add_argument("--batch", type=int, default=32)
     ap.add_argument("--lr", type=float, default=0.05)

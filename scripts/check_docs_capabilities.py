@@ -1,0 +1,98 @@
+#!/usr/bin/env python
+"""Docs-vs-code gate: the capability matrix in ``docs/ENGINES.md`` must
+agree with the conv engines' declared capability flags.
+
+The matrix is the markdown table whose header row is exactly
+
+    | engine | asym_stride | dilation | paper_geometry |
+
+Each built-in engine must have a row, and each cell must match the
+registry (``repro.core.conv.ENGINES``):
+
+    asym_stride     -> "yes" / "no"    from Engine.asym_stride
+    dilation        -> "native" / "materialize"  from Engine.native_dilation
+    paper_geometry  -> "yes" / "no"    from Engine.paper_geometry
+
+Run from the repo root (CI docs lane + tier-1 test):
+
+    PYTHONPATH=src python scripts/check_docs_capabilities.py [root]
+"""
+
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+HEADER = ("engine", "asym_stride", "dilation", "paper_geometry")
+
+
+def _cells(line: str) -> list[str]:
+    return [c.strip().strip("`") for c in line.strip().strip("|").split("|")]
+
+
+def parse_matrix(text: str) -> dict[str, tuple[str, str, str]]:
+    """engine name -> (asym_stride, dilation, paper_geometry) cells."""
+    lines = text.splitlines()
+    rows: dict[str, tuple[str, str, str]] = {}
+    for i, line in enumerate(lines):
+        if tuple(_cells(line)) != HEADER:
+            continue
+        for row in lines[i + 2:]:            # skip the |---| separator
+            if not row.strip().startswith("|"):
+                break
+            cells = _cells(row)
+            if len(cells) != len(HEADER) or set(cells[1]) <= {"-"}:
+                continue
+            rows[cells[0]] = (cells[1], cells[2], cells[3])
+        return rows
+    raise SystemExit(
+        "docs/ENGINES.md: capability-matrix header row "
+        f"{' | '.join(HEADER)!r} not found")
+
+
+def expected() -> dict[str, tuple[str, str, str]]:
+    from repro.core.conv import ENGINES
+    return {
+        name: ("yes" if e.asym_stride else "no",
+               "native" if e.native_dilation else "materialize",
+               "yes" if e.paper_geometry else "no")
+        for name, e in ENGINES.items()
+    }
+
+
+def main(argv: list[str]) -> int:
+    root = pathlib.Path(argv[1]) if len(argv) > 1 else \
+        pathlib.Path(__file__).resolve().parent.parent
+    sys.path.insert(0, str(root / "src"))
+    doc_path = root / "docs" / "ENGINES.md"
+    documented = parse_matrix(doc_path.read_text(encoding="utf-8"))
+    want = expected()
+    problems = []
+    for name, flags in want.items():
+        if not re.fullmatch(r"[a-z0-9_]+", name):
+            continue                        # test-registered oddball names
+        if name not in documented:
+            problems.append(f"engine {name!r} missing from the matrix")
+        elif documented[name] != flags:
+            problems.append(
+                f"engine {name!r}: documented {documented[name]} but the "
+                f"registry declares {flags}")
+    for name in documented:
+        if name not in want:
+            problems.append(
+                f"matrix documents unknown engine {name!r} "
+                "(removed or renamed?)")
+    if problems:
+        print(f"{doc_path.relative_to(root)} capability matrix disagrees "
+              "with repro.core.conv.ENGINES:", file=sys.stderr)
+        for p in problems:
+            print("  " + p, file=sys.stderr)
+        return 1
+    print(f"ok: {doc_path.relative_to(root)} matrix matches "
+          f"{len(documented)} registered engines")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv))

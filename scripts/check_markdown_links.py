@@ -1,0 +1,76 @@
+#!/usr/bin/env python
+"""Markdown link check for ``docs/`` + ``README.md``.
+
+Every relative link target (``[text](path)`` and ``[text](path#anchor)``)
+must exist on disk, and every intra-document ``#anchor`` must match a
+heading in the target file (GitHub slug rules, simplified).  External
+``http(s)://`` links are not fetched -- this is an offline structural
+check, run by the CI docs lane and the tier-1 suite.
+
+    python scripts/check_markdown_links.py [root]
+"""
+
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+LINK = re.compile(r"(?<!!)\[[^\]]*\]\(([^)\s]+)\)")
+HEADING = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+
+
+def _slug(heading: str) -> str:
+    """GitHub-style anchor slug (simplified: enough for our headings).
+    Every space becomes a hyphen and punctuation is dropped WITHOUT
+    collapsing, so "A → B" slugs to "a--b" exactly like GitHub."""
+    text = re.sub(r"[`*_]", "", heading.strip().lower())
+    text = re.sub(r"[^\w\s-]", "", text)
+    return text.replace(" ", "-")
+
+
+def _anchors(path: pathlib.Path) -> set[str]:
+    return {_slug(h) for h in HEADING.findall(
+        path.read_text(encoding="utf-8"))}
+
+
+def check(root: pathlib.Path) -> list[str]:
+    files = sorted((root / "docs").glob("**/*.md")) if \
+        (root / "docs").is_dir() else []
+    if (root / "README.md").is_file():
+        files.append(root / "README.md")
+    problems = []
+    for md in files:
+        rel = md.relative_to(root)
+        for target in LINK.findall(md.read_text(encoding="utf-8")):
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            path_part, _, anchor = target.partition("#")
+            dest = md if not path_part else \
+                (md.parent / path_part).resolve()
+            if not dest.exists():
+                problems.append(f"{rel}: broken link -> {target}")
+                continue
+            if anchor and dest.suffix == ".md" and \
+                    _slug(anchor) not in _anchors(dest):
+                problems.append(f"{rel}: missing anchor -> {target}")
+    if not files:
+        problems.append("no markdown files found under docs/ or README.md")
+    return problems
+
+
+def main(argv: list[str]) -> int:
+    root = pathlib.Path(argv[1]) if len(argv) > 1 else \
+        pathlib.Path(__file__).resolve().parent.parent
+    problems = check(root)
+    if problems:
+        print("markdown link check failed:", file=sys.stderr)
+        for p in problems:
+            print("  " + p, file=sys.stderr)
+        return 1
+    print("ok: all relative markdown links in docs/ + README.md resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv))

@@ -46,14 +46,16 @@ def in_area0_transposed(h, w, d: ConvDims):
 
 
 def in_area1_transposed(h, w, d: ConvDims):
-    """Eq. (3): zero-insertion grid + lower/right padding.
+    """Eq. (3): zero-insertion grid + lower/right padding, evaluated
+    independently per axis (period = the forward stride of THAT axis, so
+    asymmetric strides just use two different moduli).
 
     The modulo test also covers the lower/right pad because indices past the
     last inserted row map to h' >= H_o, which we guard with a range check.
     """
     hh = h - (d.K_h - 1 - d.P_h)
     ww = w - (d.K_w - 1 - d.P_w)
-    return (hh % d.S > 0) | (ww % d.S > 0)
+    return (hh % d.s_h > 0) | (ww % d.s_w > 0)
 
 
 def nz_transposed(h, w, d: ConvDims):
@@ -61,8 +63,8 @@ def nz_transposed(h, w, d: ConvDims):
     i.e. fails Eq. (2) and Eq. (3) and lands inside the stored H_o x W_o."""
     hh = h - (d.K_h - 1 - d.P_h)
     ww = w - (d.K_w - 1 - d.P_w)
-    hp = hh // d.S
-    wp = ww // d.S
+    hp = hh // d.s_h
+    wp = ww // d.s_w
     ok = (~in_area0_transposed(h, w, d)) & (~in_area1_transposed(h, w, d))
     ok &= (hp >= 0) & (hp < d.H_o) & (wp >= 0) & (wp < d.W_o)
     return ok, hp, wp
@@ -70,10 +72,10 @@ def nz_transposed(h, w, d: ConvDims):
 
 def nz_dilated(h, w, d: ConvDims):
     """Eq. (4): virtual zero-inserted dY pixel (h, w) is non-zero iff
-    h % S == 0 and w % S == 0; compact position (h/S, w/S)."""
-    ok = (h % d.S == 0) & (w % d.S == 0)
-    hp = h // d.S
-    wp = w // d.S
+    h % s_h == 0 and w % s_w == 0; compact position (h/s_h, w/s_w)."""
+    ok = (h % d.s_h == 0) & (w % d.s_w == 0)
+    hp = h // d.s_h
+    wp = w // d.s_w
     ok &= (hp < d.H_o) & (wp < d.W_o)
     return ok, hp, wp
 
@@ -166,10 +168,10 @@ def gather_lowered_A_grad(dy: jax.Array, d: ConvDims) -> jax.Array:
 
 def input_grad_implicit(dy: jax.Array, w: jax.Array, d: ConvDims) -> jax.Array:
     """Loss calculation via BP-im2col: dI = B_lowered^T-structured GEMM with
-    Tr(rot180(W)); only compact dy is ever read."""
-    assert d.s_h == d.s_w, (
-        "Algorithm 1 address mapping assumes the paper's square stride; "
-        "asymmetric strides are capability-gated to another engine")
+    Tr(rot180(W)); only compact dy is ever read.  The Algorithm 1 address
+    mapping is per-axis (independent row/column predicates), so asymmetric
+    strides work directly; ``w`` is the effective (dense-extent) kernel."""
+    assert w.shape[-2:] == (d.K_h, d.K_w)
     bm = gather_lowered_B_loss(dy, d)                 # (N*Kh*Kw, B*Hi*Wi)
     wt = rot180(w).transpose(1, 0, 2, 3)              # (C, N, Kh, Kw)
     wm = wt.reshape(d.C, d.N * d.K_h * d.K_w)         # (C, N*Kh*Kw)
@@ -181,15 +183,15 @@ def input_grad_implicit(dy: jax.Array, w: jax.Array, d: ConvDims) -> jax.Array:
 def weight_grad_implicit(x: jax.Array, dy: jax.Array, d: ConvDims) -> jax.Array:
     """Gradient calculation via BP-im2col: matrix A rows are fetched through
     Algorithm 2 (compact dy only); matrix B is the im2col of the padded input
-    (same as inference -- no zero-space beyond ordinary padding)."""
+    (same as inference -- no zero-space beyond ordinary padding).  The
+    zero-insertion period of the virtual dY is per-axis (s_h rows, s_w
+    cols), so asymmetric strides work directly."""
     from repro.core.im2col_ref import im2col, zero_pad
-    assert d.s_h == d.s_w, (
-        "Algorithm 2 address mapping assumes the paper's square stride; "
-        "asymmetric strides are capability-gated to another engine")
     a = gather_lowered_A_grad(dy, d)                  # (N, B*Ho''*Wo'')
     xe = zero_pad(x, d.P_h, d.P_w,
                   d.p_h_hi, d.p_w_hi).transpose(1, 0, 2, 3)
-    xe = xe[:, :, :d.K_h + (d.H_o - 1) * d.S, :d.K_w + (d.W_o - 1) * d.S]
+    xe = xe[:, :, :d.K_h + (d.H_o - 1) * d.s_h,
+            :d.K_w + (d.W_o - 1) * d.s_w]
     b = im2col(xe, d.H_o2, d.W_o2, 1)                 # (C*Kh*Kw, B*Ho''*Wo'')
     dwt = b @ a.T                                     # (C*Kh*Kw, N)
     return (dwt.reshape(d.C, d.K_h, d.K_w, d.N)
@@ -210,8 +212,8 @@ def lowered_sparsity_loss(d: ConvDims) -> float:
     ws = np.arange(d.W_i)[:, None] + np.arange(d.K_w)[None, :]
     hh = hs - (d.K_h - 1 - d.P_h)
     ww = ws - (d.K_w - 1 - d.P_w)
-    ok_h = (hh >= 0) & (hh % d.S == 0) & (hh // d.S < d.H_o)
-    ok_w = (ww >= 0) & (ww % d.S == 0) & (ww // d.S < d.W_o)
+    ok_h = (hh >= 0) & (hh % d.s_h == 0) & (hh // d.s_h < d.H_o)
+    ok_w = (ww >= 0) & (ww % d.s_w == 0) & (ww // d.s_w < d.W_o)
     nz = ok_h.sum() * ok_w.sum()
     return 1.0 - nz / (rows * cols / d.N / d.B)  # per (n, b) plane ratio
 

@@ -19,28 +19,38 @@ Registered engines (``ENGINES``; extend with :func:`register_engine`):
                          address mapping + gather (literal reproduction)
   * ``"bp_phase"``    -- stride-phase decomposition (same zero elimination,
                          dense MXU form; supports asymmetric strides)
-  * ``"pallas"``      -- Pallas tap-GEMM kernels (explicit VMEM BlockSpecs)
+  * ``"pallas"``      -- Pallas tap-GEMM kernels (explicit VMEM BlockSpecs;
+                         per-axis tap tables, so asymmetric strides and
+                         tap-native dilation are first-class)
   * ``"auto"``        -- not an engine: the resolver picks per pass.  It
                          consults the spec's geometry and the Pallas tile
-                         planner (``repro.kernels.ops``): stride-1 layers
-                         stay on the dense native path (no zero-space to
-                         eliminate), strided layers take the Pallas tap-GEMM
-                         path whenever the tile plan fits the VMEM budget,
-                         and every fallback records WHY
-                         (:func:`policy_decisions`).
+                         planner (``repro.kernels.ops``): stride-1
+                         undilated layers stay on the dense native path (no
+                         zero-space to eliminate), strided OR dilated
+                         layers take the Pallas tap-GEMM path whenever the
+                         tile plan fits the VMEM budget, and every fallback
+                         records WHY (:func:`policy_decisions`).
 
-Engines that cannot serve a spec (asymmetric stride on the square-stride
-Algorithm 1/2 gathers or the Pallas planners; geometry outside the paper's
-``P <= K - 1`` constraints on any implicit engine; a tile plan over budget
-on ``pallas``) gracefully resolve to the strongest capable engine -- the
-substitution is recorded, never silent: :func:`dispatch_events` counts the
-engine *actually used* per pass and :func:`policy_decisions` keeps the
-per-decision reasons.  Dilation is supported for every engine by a
-dispatch-level lowering: the kernel is zero-dilated to its effective extent
-(``K_eff = (K-1)*D + 1``) before entering an engine, and the weight
+Engines that cannot serve a spec (asymmetric stride on an engine without
+per-axis support -- declared via the ``asym_stride`` capability flag;
+geometry outside the paper's ``P <= K - 1`` constraints on any implicit
+engine; a tile plan over budget on ``pallas``) gracefully resolve to the
+strongest capable engine -- the substitution is recorded, never silent:
+:func:`dispatch_events` counts the engine *actually used* per pass and
+:func:`policy_decisions` keeps the per-decision reasons.
+
+Dilation is lowered per engine, declared by the ``native_dilation``
+capability flag.  Engines WITHOUT it get a dispatch-level kernel
+materialization: the kernel is zero-dilated to its effective extent
+(``K_eff = (K-1)*D + 1``) before entering the engine, and the weight
 gradient's real taps are sliced back out -- exact, because the inserted
 kernel zeros contribute nothing to ``y``/``dI`` and their ``dW`` entries
-are discarded.
+are discarded.  Engines WITH it (``pallas``) receive the compact kernel
+untouched: their tap tables simply skip the zero positions, so a dilated
+conv runs ``k_h*k_w`` tap-GEMMs instead of ``K_eff_h*K_eff_w`` --
+~``1/(d_h*d_w)`` of the materialized FLOPs -- and the weight gradient is
+computed only for real taps.  The materialization path stays registered as
+the cross-check oracle the tests compare against.
 
 ``conv2d`` carries a ``jax.custom_vjp`` whose nondiff arguments are the
 ``(ConvSpec, EnginePolicy)`` pair, so ``jax.grad``, ``jit`` and ``vmap``
@@ -92,6 +102,10 @@ class Engine:
     weight_grad: Callable  # (x, dy, d) -> dw   (dilated mode, Algorithm 2)
     asym_stride: bool = False     # supports d.s_h != d.s_w
     paper_geometry: bool = True   # requires ConvDims.validate() (P <= K-1 ..)
+    native_dilation: bool = False  # consumes the compact kernel and skips
+    #                                dilation zero taps itself; False means
+    #                                the dispatcher materializes the dilated
+    #                                kernel before/after the engine runs
 
 
 def _pallas_forward(x, w, d):
@@ -133,15 +147,20 @@ ENGINES: dict[str, Engine] = {}
 def register_engine(name: str, forward: Callable, input_grad: Callable,
                     weight_grad: Callable, *, asym_stride: bool = False,
                     paper_geometry: bool = True,
+                    native_dilation: bool = False,
                     overwrite: bool = False) -> Engine:
     """Register a conv engine under ``name`` for use in any ``EnginePolicy``.
 
     The three callables take ``(x, w, d)`` / ``(dy, w, d)`` / ``(x, dy, d)``
-    with ``d`` the per-group :class:`ConvDims` (dilation already folded into
-    the kernel extent).  ``asym_stride`` declares support for
-    ``d.s_h != d.s_w``; ``paper_geometry`` declares that the engine needs
-    ``ConvDims.validate()`` to hold (the resolver falls back otherwise).
-    Re-registering an existing name requires ``overwrite=True``.
+    with ``d`` the per-group :class:`ConvDims`.  ``asym_stride`` declares
+    support for ``d.s_h != d.s_w``; ``paper_geometry`` declares that the
+    engine needs ``ConvDims.validate()`` to hold (the resolver falls back
+    otherwise); ``native_dilation`` declares that the engine consumes the
+    COMPACT kernel and handles ``d.D_h``/``d.D_w`` itself (skipping zero
+    taps) -- without it, the dispatcher hands the engine a materialized
+    zero-dilated kernel of extent ``K_eff`` and slices the real taps back
+    out of its weight gradient.  Re-registering an existing name requires
+    ``overwrite=True``.
     """
     if name == AUTO or not name:
         raise ValueError(f"invalid engine name {name!r}")
@@ -149,7 +168,8 @@ def register_engine(name: str, forward: Callable, input_grad: Callable,
         raise ValueError(f"engine {name!r} is already registered "
                          "(pass overwrite=True to replace it)")
     eng = Engine(name, forward, input_grad, weight_grad,
-                 asym_stride=asym_stride, paper_geometry=paper_geometry)
+                 asym_stride=asym_stride, paper_geometry=paper_geometry,
+                 native_dilation=native_dilation)
     ENGINES[name] = eng
     return eng
 
@@ -161,12 +181,13 @@ register_engine("traditional", im2col_ref.conv2d_forward_explicit,
                 im2col_ref.weight_grad_explicit, asym_stride=True)
 register_engine("bp_im2col", im2col_ref.conv2d_forward_explicit,
                 bpim2col.input_grad_implicit,
-                bpim2col.weight_grad_implicit)
+                bpim2col.weight_grad_implicit, asym_stride=True)
 register_engine("bp_phase", im2col_ref.conv2d_lax,
                 phase_decomp.input_grad_phase,
                 phase_decomp.weight_grad_phase, asym_stride=True)
 register_engine("pallas", _pallas_forward, _pallas_input_grad,
-                _pallas_weight_grad)
+                _pallas_weight_grad, asym_stride=True,
+                native_dilation=True)
 
 #: the built-in engine names (legacy export; registry may grow beyond it).
 MODES: tuple[str, ...] = tuple(ENGINES)
@@ -189,9 +210,11 @@ def make_dims(x_shape, w_shape, stride=1, padding=0,
               groups: int = 1, dilation=1) -> ConvDims:
     """Per-group ConvDims: C and N are the per-group channel counts.
 
-    ``stride``/``dilation`` accept an int or a per-axis pair; dilation is
-    folded into the kernel extent (``K_eff``), matching the dispatch-level
-    lowering the engines see.
+    ``stride``/``dilation`` accept an int or a per-axis pair.  Dilation is
+    folded into the kernel extent (``K_h``/``K_w`` are the EFFECTIVE
+    ``K_eff``) and also recorded per axis (``D_h``/``D_w``), so
+    materializing engines and the tap-native Pallas engine both read the
+    geometry they need from the same dims.
     """
     return spec_dims(x_shape, w_shape,
                      ConvSpec.make(stride=stride, padding=padding,
@@ -211,7 +234,8 @@ def spec_dims(x_shape, w_shape, spec: ConvSpec) -> ConvDims:
     d = ConvDims(B=b, C=cg, H_i=h, W_i=w, N=n // g,
                  K_h=keff_h, K_w=keff_w,
                  S=spec.s_h, S_w=(-1 if spec.s_w == spec.s_h else spec.s_w),
-                 P_h=ph_lo, P_w=pw_lo, P_h_hi=ph_hi, P_w_hi=pw_hi)
+                 P_h=ph_lo, P_w=pw_lo, P_h_hi=ph_hi, P_w_hi=pw_hi,
+                 D_h=spec.d_h, D_w=spec.d_w)
     if d.H_o < 1 or d.W_o < 1:
         # A mis-sized layer, not a capability question: fail at trace time
         # for EVERY engine rather than training on empty activations.
@@ -224,8 +248,8 @@ def spec_dims(x_shape, w_shape, spec: ConvSpec) -> ConvDims:
 
 
 def _dilate_weight(w: jax.Array, spec: ConvSpec) -> jax.Array:
-    """Materialize the dilated kernel (zeros between taps) so every engine
-    sees an ordinary dense conv of extent K_eff."""
+    """Materialize the dilated kernel (zeros between taps) so an engine
+    WITHOUT native dilation sees an ordinary dense conv of extent K_eff."""
     if not spec.has_dilation:
         return w
     return zero_insert(w, (spec.d_h, spec.d_w))
@@ -236,6 +260,12 @@ def _undilate_dweight(dw_eff: jax.Array, spec: ConvSpec) -> jax.Array:
     if not spec.has_dilation:
         return dw_eff
     return dw_eff[..., ::spec.d_h, ::spec.d_w]
+
+
+def _weight_for(eng: Engine, w: jax.Array, spec: ConvSpec) -> jax.Array:
+    """The kernel an engine consumes: compact for native-dilation engines
+    (their tap tables skip the zero positions), materialized otherwise."""
+    return w if eng.native_dilation else _dilate_weight(w, spec)
 
 
 # ---------------------------------------------------------------------------
@@ -314,15 +344,17 @@ def resolve_engine(requested: str, pass_name: str,
                    d: ConvDims) -> tuple[str, str]:
     """One pass's selection: ``(engine actually used, reason)``.
 
-    ``"auto"`` is the shape-dependent strategy: stride-1 layers have no
-    zero-space (the phase decomposition degenerates to the native dense
-    conv, which is optimal), strided layers go to the Pallas tap-GEMM
+    ``"auto"`` is the shape-dependent strategy: stride-1 undilated layers
+    have no zero-space (the phase decomposition degenerates to the native
+    dense conv, which is optimal), strided or dilated layers go to the
+    Pallas tap-GEMM -- per-axis tap tables serve asymmetric strides, and a
+    dilated kernel's zero taps are skipped rather than materialized --
     whenever the tile plan fits, and everything else falls back down
     ``bp_phase -> lax`` with the reason recorded.  Explicit requests that
     the engine cannot serve resolve the same way -- recorded, not silent.
     """
     if requested == AUTO:
-        if d.s_h == 1 and d.s_w == 1:
+        if d.s_h == 1 and d.s_w == 1 and not d.has_dilation:
             if _capability_gap(ENGINES["bp_phase"], d) is None:
                 return "bp_phase", ("auto: stride 1 has no zero-space; "
                                     "phase decomposition degenerates to the "
@@ -331,6 +363,10 @@ def resolve_engine(requested: str, pass_name: str,
                 d, "auto: stride 1, geometry outside implicit constraints")
         gap = _capability_gap(ENGINES["pallas"], d)
         if gap is None and _pallas_fits(pass_name, d):
+            if d.has_dilation:
+                return "pallas", ("auto: tap table skips the dilation zero "
+                                  "taps and the tile plan fits the VMEM "
+                                  "budget")
             return "pallas", "auto: tap-GEMM tile plan fits the VMEM budget"
         return _first_capable(
             d, f"auto: pallas unavailable "
@@ -416,8 +452,10 @@ def _weight_grad(x, dy, d: ConvDims, eng: Engine, groups: int):
         1, 0, 2, 3, 4)
     dyg = dy.reshape(b, groups, d.N, d.H_o, d.W_o).transpose(1, 0, 2, 3, 4)
     dwg = jax.vmap(lambda xx, dd: eng.weight_grad(xx, dd, d))(
-        xg, dyg)                                   # (g, N/g, C/g, Kh, Kw)
-    return dwg.reshape(groups * d.N, d.C, d.K_h, d.K_w)
+        xg, dyg)                                   # (g, N/g, C/g, kh, kw)
+    # Kernel extent from the engine's output: compact (k_taps) for
+    # native-dilation engines, effective (K_eff) otherwise.
+    return dwg.reshape(groups * d.N, *dwg.shape[2:])
 
 
 # ---------------------------------------------------------------------------
@@ -470,24 +508,25 @@ def _conv2d(x: jax.Array, w: jax.Array, spec: ConvSpec,
             policy: EnginePolicy) -> jax.Array:
     d = spec_dims(x.shape, w.shape, spec)
     eng = _dispatch("forward", policy.forward, d)
-    return _forward(x, _dilate_weight(w, spec), d, eng, spec.groups)
+    return _forward(x, _weight_for(eng, w, spec), d, eng, spec.groups)
 
 
 def _conv2d_fwd(x, w, spec, policy):
     d = spec_dims(x.shape, w.shape, spec)
     eng = _dispatch("forward", policy.forward, d)
-    y = _forward(x, _dilate_weight(w, spec), d, eng, spec.groups)
+    y = _forward(x, _weight_for(eng, w, spec), d, eng, spec.groups)
     return y, (x, w)
 
 
 def _conv2d_bwd(spec, policy, res, dy):
     x, w = res
     d = spec_dims(x.shape, w.shape, spec)
-    w_eff = _dilate_weight(w, spec)
     eng_i = _dispatch("input_grad", policy.input_grad, d)
     eng_w = _dispatch("weight_grad", policy.weight_grad, d)
-    dx = _input_grad(dy, w_eff, d, eng_i, spec.groups)
-    dw = _undilate_dweight(_weight_grad(x, dy, d, eng_w, spec.groups), spec)
+    dx = _input_grad(dy, _weight_for(eng_i, w, spec), d, eng_i, spec.groups)
+    dw = _weight_grad(x, dy, d, eng_w, spec.groups)
+    if not eng_w.native_dilation:
+        dw = _undilate_dweight(dw, spec)
     return dx.astype(x.dtype), dw.astype(w.dtype)
 
 
@@ -613,7 +652,7 @@ def conv1d(x: jax.Array, w: jax.Array, stride: int = 1, padding=0,
 
     padding: int (symmetric) or (lo, hi) along the temporal dim.  The
     stride/dilation are applied symmetrically on the degenerate (H=1) axis
-    too, so the square-stride engines (pallas, bp_im2col) stay eligible.
+    too (a no-op there: one row has no stride phases or dilation gaps).
     """
     policy = _merge_policy(policy, mode)
     if isinstance(padding, int):
@@ -688,16 +727,13 @@ def resolve_policy(d: ConvDims, policy=None) -> dict[str, dict[str, str]]:
 def policy_report(x_shape, w_shape, spec=None, policy=None) -> dict:
     """Static dispatch summary for one conv layer under one policy: the
     per-pass engines the resolver would pick (with reasons) plus the Pallas
-    tile plans when the spec is planner-eligible (symmetric stride)."""
+    tile plans (the planners build per-axis tap tables, so asymmetric
+    strides and dilations plan like any other geometry)."""
     spec = ConvSpec.coerce(spec)
     d = spec_dims(x_shape, w_shape, spec)
-    report = {"passes": resolve_policy(d, policy), "spec": str(spec)}
-    if d.s_h == d.s_w:
-        from repro.kernels import ops
-        report["plan"] = ops.plan_report(d)
-    else:
-        report["plan"] = {"pallas_path": False,
-                          "reason": "asymmetric stride"}
+    from repro.kernels import ops
+    report = {"passes": resolve_policy(d, policy), "spec": str(spec),
+              "plan": ops.plan_report(d)}
     report["pallas_path"] = all(
         v["engine"] == "pallas" for v in report["passes"].values())
     return report
@@ -705,17 +741,13 @@ def policy_report(x_shape, w_shape, spec=None, policy=None) -> dict:
 
 def conv_plan_report(x_shape, w_shape, stride=1, padding=0,
                      groups: int = 1,
-                     budget: int | None = None) -> dict[str, object]:
+                     budget: int | None = None,
+                     dilation=1) -> dict[str, object]:
     """Static Pallas dispatch summary for one conv layer: per-op tile plans
     (spatial/channel tiles, split counts, VMEM footprint) and whether the
     whole layer stays on the Pallas path.  Convenience wrapper over
     ``repro.kernels.ops.plan_report`` taking array shapes instead of a
-    ``ConvDims``; pure planner introspection, no arrays are touched.
-    Asymmetric strides are planner-ineligible and report
-    ``pallas_path=False`` (like :func:`policy_report`) instead of
-    raising."""
+    ``ConvDims``; pure planner introspection, no arrays are touched."""
     from repro.kernels import ops
-    d = make_dims(x_shape, w_shape, stride, padding, groups)
-    if d.s_h != d.s_w:
-        return {"pallas_path": False, "reason": "asymmetric stride"}
+    d = make_dims(x_shape, w_shape, stride, padding, groups, dilation)
     return ops.plan_report(d, budget)

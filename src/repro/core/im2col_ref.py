@@ -43,10 +43,17 @@ class ConvDims:
 
     ``S`` is the row stride.  The column stride ``S_w`` defaults to the
     ``-1`` sentinel meaning "same as ``S``" (the paper's square case); the
-    per-axis accessors ``s_h``/``s_w`` resolve it.  The explicit baseline,
-    the lax reference and the phase decomposition support ``s_h != s_w``;
-    the Algorithm 1/2 gathers and the Pallas planners require symmetry and
-    are capability-gated by the engine policy resolver.
+    per-axis accessors ``s_h``/``s_w`` resolve it.  Every engine --
+    including the Algorithm 1/2 gathers and the Pallas tap planners, whose
+    tap tables are built independently per axis -- supports ``s_h != s_w``.
+
+    ``D_h``/``D_w`` declare a kernel dilation: ``K_h``/``K_w`` stay the
+    EFFECTIVE (zero-dilated) extents, so every output-size formula and
+    address mapping below is dilation-oblivious, and the dilation fields
+    only say which effective taps are real (positions ``i*D_h``,
+    ``j*D_w``).  Engines that materialize the dilated kernel ignore them;
+    the Pallas tap tables use them to skip the zero taps outright
+    (``k_taps_h * k_taps_w`` real taps instead of ``K_h * K_w``).
     """
 
     B: int       # batch
@@ -54,14 +61,23 @@ class ConvDims:
     H_i: int     # input height
     W_i: int     # input width
     N: int       # output channels
-    K_h: int     # kernel height
-    K_w: int     # kernel width
+    K_h: int     # kernel height (EFFECTIVE extent: (taps-1)*D_h + 1)
+    K_w: int     # kernel width  (EFFECTIVE extent: (taps-1)*D_w + 1)
     S: int = 1   # row stride (and column stride when S_w == -1)
     P_h: int = 0
     P_w: int = 0
     P_h_hi: int = -1   # -1: symmetric (same as P_h)
     P_w_hi: int = -1   # -1: symmetric (same as P_w)
     S_w: int = -1      # -1: symmetric (same as S)
+    D_h: int = 1       # kernel dilation (1: dense kernel)
+    D_w: int = 1
+
+    def __post_init__(self):
+        assert self.D_h >= 1 and self.D_w >= 1, (self.D_h, self.D_w)
+        assert (self.K_h - 1) % self.D_h == 0 and \
+            (self.K_w - 1) % self.D_w == 0, (
+            f"effective kernel extent ({self.K_h}, {self.K_w}) is not "
+            f"(taps-1)*D + 1 for dilation ({self.D_h}, {self.D_w})")
 
     @property
     def s_h(self) -> int:
@@ -70,6 +86,19 @@ class ConvDims:
     @property
     def s_w(self) -> int:
         return self.S if self.S_w < 0 else self.S_w
+
+    @property
+    def k_taps_h(self) -> int:
+        """Real (non-zero) kernel taps along H: the compact kernel height."""
+        return (self.K_h - 1) // self.D_h + 1
+
+    @property
+    def k_taps_w(self) -> int:
+        return (self.K_w - 1) // self.D_w + 1
+
+    @property
+    def has_dilation(self) -> bool:
+        return self.D_h > 1 or self.D_w > 1
 
     @property
     def p_h_hi(self) -> int:

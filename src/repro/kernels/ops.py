@@ -4,7 +4,12 @@ Responsibilities:
   * layout prep (NCHW -> NHWC, padding, phase-splitting) -- pure reshapes /
     slices on COMPACT data, done once at trace time;
   * static tap-table construction (the BP-im2col address mapping, resolved
-    per stride phase);
+    per stride phase).  Tap tables are built INDEPENDENTLY per axis: the
+    phase grid is ``s_h x s_w`` (asymmetric strides included), and a kernel
+    dilation (``ConvDims.D_h``/``D_w``) drops the zero taps from the table
+    outright -- only the ``k_taps_h * k_taps_w`` real taps are ever
+    enumerated, multiplied or planned for, never the ``K_h * K_w``
+    zero-dilated extent.  Callers pass the COMPACT (undilated) kernel;
   * tile-plan SEARCH under an explicit VMEM budget: the planners walk
     (spatial tile, cin tile, cout tile) candidates -- full plane first, then
     halving the larger spatial dim, then halving channel tiles -- and take
@@ -38,7 +43,7 @@ import os
 import jax
 import jax.numpy as jnp
 
-from repro.core.im2col_ref import ConvDims, rot180, zero_pad
+from repro.core.im2col_ref import ConvDims, rot180, zero_insert, zero_pad
 from repro.core import phase_decomp
 from repro.kernels import tap_gemm as tg
 from repro.kernels.tap_gemm import _cdiv, _taps_halo
@@ -74,18 +79,13 @@ def reset_plan_events() -> None:
 
 def _canonical(d: ConvDims) -> ConvDims:
     """Resolve the P_*_hi = -1 'symmetric' sentinel to explicit high-side
-    pads (and the S_w = -1 stride sentinel) so geometrically identical
+    pads and normalize the S_w stride sentinel so geometrically identical
     layers share one plan-cache entry (and one plan event) no matter how
     the caller spelled the padding/stride."""
-    if d.s_h != d.s_w:
-        raise ValueError(
-            "the Pallas tap planners require a symmetric stride "
-            f"(s_h == s_w), got ({d.s_h}, {d.s_w}); asymmetric-stride specs "
-            "are capability-gated off the pallas engine by the policy "
-            "resolver (repro.core.conv)")
-    if d.P_h_hi == d.p_h_hi and d.P_w_hi == d.p_w_hi and d.S_w == -1:
+    sw = -1 if d.s_w == d.S else d.s_w
+    if d.P_h_hi == d.p_h_hi and d.P_w_hi == d.p_w_hi and d.S_w == sw:
         return d
-    return dataclasses.replace(d, P_h_hi=d.p_h_hi, P_w_hi=d.p_w_hi, S_w=-1)
+    return dataclasses.replace(d, P_h_hi=d.p_h_hi, P_w_hi=d.p_w_hi, S_w=sw)
 
 
 # ---------------------------------------------------------------------------
@@ -121,23 +121,28 @@ def _channel_tile(c: int) -> tuple[int, int]:
     return cp, 128
 
 
-def _phase_split(xp: jax.Array, S: int) -> jax.Array:
-    """(B, Hp, Wp, C) -> (S*S, B, ceil(Hp/S), ceil(Wp/S), C) phase planes."""
+def _phase_split(xp: jax.Array, s: tuple[int, int]) -> jax.Array:
+    """(B, Hp, Wp, C) -> (s_h*s_w, B, ceil(Hp/s_h), ceil(Wp/s_w), C) phase
+    planes; plane index = (h % s_h) * s_w + (w % s_w)."""
+    s_h, s_w = s
     b, hp, wp, c = xp.shape
-    hp2 = -(-hp // S) * S
-    wp2 = -(-wp // S) * S
+    hp2 = -(-hp // s_h) * s_h
+    wp2 = -(-wp // s_w) * s_w
     xp = jnp.pad(xp, ((0, 0), (0, hp2 - hp), (0, wp2 - wp), (0, 0)))
-    xp = xp.reshape(b, hp2 // S, S, wp2 // S, S, c)
-    return xp.transpose(2, 4, 0, 1, 3, 5).reshape(S * S, b, hp2 // S, wp2 // S, c)
+    xp = xp.reshape(b, hp2 // s_h, s_h, wp2 // s_w, s_w, c)
+    return xp.transpose(2, 4, 0, 1, 3, 5).reshape(
+        s_h * s_w, b, hp2 // s_h, wp2 // s_w, c)
 
 
-def _phase_unsplit(planes: jax.Array, S: int, h: int, w: int) -> jax.Array:
-    """(S*S, B, Hq, Wq, C) -> (B, h, w, C): the exact inverse of
+def _phase_unsplit(planes: jax.Array, s: tuple[int, int],
+                   h: int, w: int) -> jax.Array:
+    """(s_h*s_w, B, Hq, Wq, C) -> (B, h, w, C): the exact inverse of
     ``_phase_split`` -- a pure reshape/transpose/crop, no scatter."""
+    s_h, s_w = s
     s2, b, hq, wq, c = planes.shape
-    assert s2 == S * S
-    x = planes.reshape(S, S, b, hq, wq, c).transpose(2, 3, 0, 4, 1, 5)
-    return x.reshape(b, hq * S, wq * S, c)[:, :h, :w, :]
+    assert s2 == s_h * s_w
+    x = planes.reshape(s_h, s_w, b, hq, wq, c).transpose(2, 3, 0, 4, 1, 5)
+    return x.reshape(b, hq * s_h, wq * s_w, c)[:, :h, :w, :]
 
 
 # ---------------------------------------------------------------------------
@@ -224,20 +229,28 @@ class PhasePlan:
     every phase reads the same globally padded dY at a uniform base; the
     output planes are un-phase-split by the inverse of ``_phase_split``.
     """
-    n_qh: int            # uniform per-phase output rows = ceil(H_i / S)
+    n_qh: int            # uniform per-phase output rows = ceil(H_i / s_h)
     n_qw: int
     g_lo_h: int          # global low-side dY padding (covers min offset)
     g_lo_w: int
     t_max: int           # widest per-phase tap table (stack padded to this)
-    phase_specs: tuple   # per plane r_h*S+r_w: (c_h, c_w, m_h, m_w) | None
+    phase_specs: tuple   # per plane r_h*s_w+r_w: (row idxs, col idxs) into
+                         # rot180(compact kernel), or None (phase gets zero)
     phase_taps: tuple    # per plane: tuple[(j, du, dv), ...]
     tile: TilePlan
 
 
 def _forward_taps(d: ConvDims) -> tuple[tuple[int, int, int], ...]:
-    """Kernel tap (kh, kw) -> (phase plane, du, dv) over the split input."""
-    return tuple(((kh % d.S) * d.S + (kw % d.S), kh // d.S, kw // d.S)
-                 for kh in range(d.K_h) for kw in range(d.K_w))
+    """Real kernel tap (kh, kw) -> (phase plane, du, dv) over the split
+    input.  Per-axis phases (``s_h x s_w`` planes) and dilation-native:
+    only effective positions that hold a real tap (multiples of D_h/D_w)
+    are enumerated, so a dilated kernel contributes ``k_taps_h * k_taps_w``
+    GEMMs instead of ``K_h * K_w`` -- the zero taps are skipped at plan
+    time, not multiplied at run time."""
+    return tuple(((kh % d.s_h) * d.s_w + (kw % d.s_w),
+                  kh // d.s_h, kw // d.s_w)
+                 for kh in range(0, d.K_h, d.D_h)
+                 for kw in range(0, d.K_w, d.D_w))
 
 
 def forward_plan(d: ConvDims, budget: int | None = None) -> TilePlan:
@@ -251,7 +264,7 @@ def _forward_plan(d: ConvDims, budget: int) -> TilePlan:
     cout_p, _ = _channel_tile(d.N)
     taps = _forward_taps(d)
     halo_h, halo_w = _taps_halo(taps)
-    s2 = d.S * d.S
+    s2 = d.s_h * d.s_w
 
     def cost(th, tw, cit, cot):
         return _ELEM_BYTES * (s2 * (th + halo_h) * (tw + halo_w) * cit
@@ -276,7 +289,7 @@ def _weight_grad_plan(d: ConvDims, budget: int) -> TilePlan:
     cout_p, _ = _channel_tile(d.N)
     taps = _forward_taps(d)
     halo_h, halo_w = _taps_halo(taps)
-    s2 = d.S * d.S
+    s2 = d.s_h * d.s_w
 
     def cost(th, tw, cit, cot):
         return _ELEM_BYTES * (s2 * (th + halo_h) * (tw + halo_w) * cit
@@ -298,50 +311,68 @@ def input_grad_plan(d: ConvDims,
 
 @functools.lru_cache(maxsize=4096)
 def _input_grad_plan(d: ConvDims, budget: int) -> PhasePlan | None:
-    """Single fused dispatch plan for all S*S output stride phases, or None
-    only when even the minimal tiling exceeds the budget (the op then falls
-    back to the jnp phase decomposition)."""
-    S = d.S
+    """Single fused dispatch plan for all s_h*s_w output stride phases, or
+    None only when even the minimal tiling exceeds the budget (the op then
+    falls back to the jnp phase decomposition).
+
+    Row and column tap tables are independent: each axis runs its own
+    ``phase_geometry`` under its own stride, and a kernel dilation drops
+    the phase taps that land on a zero row/col of the dilated kernel
+    (effective tap ``c + m*s`` is real iff it is a multiple of ``D``)."""
+    s_h, s_w = d.s_h, d.s_w
     a_h, a_w = d.K_h - 1 - d.P_h, d.K_w - 1 - d.P_w
     cin_p, _ = _channel_tile(d.N)      # contraction dim = N
     cout_p, _ = _channel_tile(d.C)
-    n_qh, n_qw = _cdiv(d.H_i, S), _cdiv(d.W_i, S)
-    geo_h = [phase_decomp.phase_geometry(r, a_h, S, d.K_h, d.H_i, d.H_o)
-             for r in range(S)]
-    geo_w = [phase_decomp.phase_geometry(r, a_w, S, d.K_w, d.W_i, d.W_o)
-             for r in range(S)]
-    active = {(r_h, r_w) for r_h in range(S) for r_w in range(S)
+    n_qh, n_qw = _cdiv(d.H_i, s_h), _cdiv(d.W_i, s_w)
+    geo_h = [phase_decomp.phase_geometry(r, a_h, s_h, d.K_h, d.H_i, d.H_o)
+             for r in range(s_h)]
+    geo_w = [phase_decomp.phase_geometry(r, a_w, s_w, d.K_w, d.W_i, d.W_o)
+             for r in range(s_w)]
+    # Per-axis (source offset m, compact-kernel index) lists, zero taps
+    # dropped: rot180 commutes with dilation, so effective position
+    # c + m*s of the rotated kernel is real iff divisible by D, and its
+    # compact index is (c + m*s) // D.
+    taps_h = [tuple((m, (geo_h[r][0] + m * s_h) // d.D_h)
+                    for m in range(geo_h[r][1])
+                    if (geo_h[r][0] + m * s_h) % d.D_h == 0)
+              for r in range(s_h)]
+    taps_w = [tuple((m, (geo_w[r][0] + m * s_w) // d.D_w)
+                    for m in range(geo_w[r][1])
+                    if (geo_w[r][0] + m * s_w) % d.D_w == 0)
+              for r in range(s_w)]
+    active = {(r_h, r_w) for r_h in range(s_h) for r_w in range(s_w)
               if r_h < d.H_i and r_w < d.W_i
-              and geo_h[r_h][1] > 0 and geo_w[r_w][1] > 0}
+              and taps_h[r_h] and taps_w[r_w]}
     if active:
         min_off_h = min(geo_h[r][2] for r, _ in active)
         min_off_w = min(geo_w[c][2] for _, c in active)
-        m_h_max = max(geo_h[r][2] - min_off_h + geo_h[r][1] for r, _ in active)
-        m_w_max = max(geo_w[c][2] - min_off_w + geo_w[c][1] for _, c in active)
     else:                                  # dI identically zero; still plan
         min_off_h = min_off_w = 0
-        m_h_max = m_w_max = 1
     base_h, g_lo_h = max(0, min_off_h), max(0, -min_off_h)
     base_w, g_lo_w = max(0, min_off_w), max(0, -min_off_w)
-    halo_h = base_h + m_h_max - 1
-    halo_w = base_w + m_w_max - 1
 
     specs, taps_all, t_max = [], [], 1
-    for r_h in range(S):
-        c_h, m_h, off_h, _ = geo_h[r_h]
-        for r_w in range(S):
-            c_w, m_w, off_w, _ = geo_w[r_w]
+    halo_h = halo_w = 0
+    for r_h in range(s_h):
+        _, _, off_h, _ = geo_h[r_h]
+        for r_w in range(s_w):
+            _, _, off_w, _ = geo_w[r_w]
             if (r_h, r_w) not in active:
                 specs.append(None)
                 taps_all.append(())
                 continue
             sh = base_h + (off_h - min_off_h)
             sw = base_w + (off_w - min_off_w)
+            th_, tw_ = taps_h[r_h], taps_w[r_w]
             taps_all.append(tuple(
-                (mh * m_w + mw, sh + mh, sw + mw)
-                for mh in range(m_h) for mw in range(m_w)))
-            specs.append((c_h, c_w, m_h, m_w))
-            t_max = max(t_max, m_h * m_w)
+                (ih * len(tw_) + iw, sh + mh, sw + mw)
+                for ih, (mh, _) in enumerate(th_)
+                for iw, (mw, _) in enumerate(tw_)))
+            specs.append((tuple(kh for _, kh in th_),
+                          tuple(kw for _, kw in tw_)))
+            t_max = max(t_max, len(th_) * len(tw_))
+            halo_h = max(halo_h, sh + th_[-1][0])
+            halo_w = max(halo_w, sw + tw_[-1][0])
 
     def cost(th, tw, cit, cot):
         return _ELEM_BYTES * ((th + halo_h) * (tw + halo_w) * cit
@@ -375,20 +406,32 @@ def clear_tile_plan_cache() -> None:
 
 
 def plan_report(d: ConvDims, budget: int | None = None) -> dict[str, object]:
-    """Static per-shape dispatch summary (used by benchmarks and tests)."""
+    """Static per-shape dispatch summary (used by benchmarks and tests).
+
+    ``kernel_taps`` records the zero-skipping: ``real`` is the number of
+    taps the Pallas GEMMs actually run (``k_taps_h * k_taps_w``);
+    ``materialized`` is what the kernel-materialization lowering would run
+    (``K_h * K_w``, the zero-dilated extent).  They differ exactly when the
+    layer is dilated."""
     def _tile(p: TilePlan) -> dict[str, object]:
         return {"fits": p.fits, "spatial_splits": p.spatial_splits,
                 "spatial_tile": [p.oh_tile, p.ow_tile],
                 "chan_tile": [p.cin_tile, p.cout_tile],
                 "halo": [p.halo_h, p.halo_w],
+                "taps": len(p.taps),
                 "bytes_needed": p.bytes_needed}
     f = forward_plan(d, budget)
     wg = weight_grad_plan(d, budget)
     ig = input_grad_plan(d, budget)
     report = {
+        "phases": d.s_h * d.s_w,
+        "kernel_taps": {"real": d.k_taps_h * d.k_taps_w,
+                        "materialized": d.K_h * d.K_w},
         "forward": _tile(f),
         "weight_grad": _tile(wg),
-        "input_grad": ({"fused": True, "t_max": ig.t_max, **_tile(ig.tile)}
+        "input_grad": ({"fused": True, "t_max": ig.t_max,
+                        "taps_total": sum(len(t) for t in ig.phase_taps),
+                        **_tile(ig.tile)}
                        if ig is not None else {"fused": False, "fits": False}),
         "pallas_path": bool(f.fits and wg.fits and ig is not None),
     }
@@ -400,15 +443,21 @@ def plan_report(d: ConvDims, budget: int | None = None) -> dict[str, object]:
 # ---------------------------------------------------------------------------
 
 def conv2d_forward(x: jax.Array, w: jax.Array, d: ConvDims) -> jax.Array:
+    """Forward conv through the tap-GEMM kernel.  ``w`` is the COMPACT
+    kernel (``k_taps_h x k_taps_w`` spatial extent); when ``d`` carries a
+    dilation the tap table skips the zero positions instead of the kernel
+    being materialized to ``K_h x K_w``."""
+    assert w.shape[-2:] == (d.k_taps_h, d.k_taps_w), (w.shape, d)
     plan = forward_plan(d)
     if not plan.fits:
         return jax.lax.conv_general_dilated(
-            x, w, (d.S, d.S), [(d.P_h, d.p_h_hi), (d.P_w, d.p_w_hi)],
+            x, w, (d.s_h, d.s_w), [(d.P_h, d.p_h_hi), (d.P_w, d.p_w_hi)],
+            rhs_dilation=(d.D_h, d.D_w),
             dimension_numbers=("NCHW", "OIHW", "NCHW"))
     xp = zero_pad(x, d.P_h, d.P_w, d.p_h_hi, d.p_w_hi)
-    src = _phase_split(_to_nhwc(xp), d.S)            # (S*S, B, HpS, WpS, C)
+    src = _phase_split(_to_nhwc(xp), (d.s_h, d.s_w))  # (sh*sw, B, Hq, Wq, C)
     src = _pad_to(src, plan.cin_pad)
-    wt = w.transpose(2, 3, 1, 0).reshape(d.K_h * d.K_w, d.C, d.N)
+    wt = w.transpose(2, 3, 1, 0).reshape(d.k_taps_h * d.k_taps_w, d.C, d.N)
     wt = _pad_to(wt, plan.cin_pad, axis=1)
     wt = _pad_to(wt, plan.cout_pad, axis=2)
     y = tg.tap_gemm(src, wt, plan.taps, d.H_o, d.W_o,
@@ -423,21 +472,28 @@ def conv2d_forward(x: jax.Array, w: jax.Array, d: ConvDims) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 def conv2d_input_grad(dy: jax.Array, w: jax.Array, d: ConvDims) -> jax.Array:
+    """Input grad through ONE fused tap-GEMM launch.  ``w`` is the COMPACT
+    kernel; the per-phase tap tables index straight into ``rot180(w)``
+    (dilation's zero taps were dropped at plan time)."""
+    assert w.shape[-2:] == (d.k_taps_h, d.k_taps_w), (w.shape, d)
     pp = input_grad_plan(d)
     if pp is None:
-        return phase_decomp.input_grad_phase(dy, w, d)
-    tile, S = pp.tile, d.S
-    wf = rot180(w)                                       # (N, C, K_h, K_w)
+        w_eff = zero_insert(w, (d.D_h, d.D_w)) if d.has_dilation else w
+        return phase_decomp.input_grad_phase(dy, w_eff, d)
+    tile = pp.tile
+    wf = rot180(w)                                 # (N, C, k_taps, k_taps)
     blocks = []
     for spec in pp.phase_specs:
         if spec is None:                                 # phase gets no taps
             blocks.append(jnp.zeros((pp.t_max, d.N, d.C), wf.dtype))
             continue
-        c_h, c_w, m_h, m_w = spec
-        wk = wf[:, :, c_h::S, c_w::S][:, :, :m_h, :m_w]
-        wk = wk.transpose(2, 3, 0, 1).reshape(m_h * m_w, d.N, d.C)
+        rows, cols = spec
+        wk = jnp.take(jnp.take(wf, jnp.asarray(rows, jnp.int32), axis=2),
+                      jnp.asarray(cols, jnp.int32), axis=3)
+        wk = wk.transpose(2, 3, 0, 1).reshape(len(rows) * len(cols),
+                                              d.N, d.C)
         blocks.append(_pad_to(wk, pp.t_max, axis=0))
-    wk_stack = jnp.stack(blocks)                         # (S*S, T, N, C)
+    wk_stack = jnp.stack(blocks)                         # (sh*sw, T, N, C)
     wk_stack = _pad_to(wk_stack, tile.cin_pad, axis=2)
     wk_stack = _pad_to(wk_stack, tile.cout_pad, axis=3)
     src = jnp.pad(_to_nhwc(dy),                          # (B, Ho+lo, Wo+lo, N)
@@ -447,8 +503,8 @@ def conv2d_input_grad(dy: jax.Array, w: jax.Array, d: ConvDims) -> jax.Array:
         src, wk_stack, pp.phase_taps, pp.n_qh, pp.n_qw,
         cin_tile=tile.cin_tile, cout_tile=tile.cout_tile,
         oh_tile=tile.oh_tile, ow_tile=tile.ow_tile,
-        out_dtype=dy.dtype, interpret=INTERPRET)         # (S*S, B, qh, qw, C)
-    di = _phase_unsplit(out[..., :d.C], S, d.H_i, d.W_i)
+        out_dtype=dy.dtype, interpret=INTERPRET)      # (sh*sw, B, qh, qw, C)
+    di = _phase_unsplit(out[..., :d.C], (d.s_h, d.s_w), d.H_i, d.W_i)
     return _from_nhwc(di)
 
 
@@ -457,16 +513,21 @@ def conv2d_input_grad(dy: jax.Array, w: jax.Array, d: ConvDims) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 def conv2d_weight_grad(x: jax.Array, dy: jax.Array, d: ConvDims) -> jax.Array:
+    """Weight grad through the tap-wgrad kernel: one accumulated GEMM per
+    REAL kernel tap, returned at the compact ``k_taps_h x k_taps_w``
+    extent (a dilated kernel's zero taps get no gradient computed at
+    all -- they would be discarded anyway)."""
     plan = weight_grad_plan(d)
     if not plan.fits:
-        return phase_decomp.weight_grad_phase(x, dy, d)
+        dw = phase_decomp.weight_grad_phase(x, dy, d)   # effective extent
+        return dw[..., ::d.D_h, ::d.D_w] if d.has_dilation else dw
     xp = zero_pad(x, d.P_h, d.P_w, d.p_h_hi, d.p_w_hi)
-    src = _phase_split(_to_nhwc(xp), d.S)
+    src = _phase_split(_to_nhwc(xp), (d.s_h, d.s_w))
     src = _pad_to(src, plan.cin_pad)
     dyn = _pad_to(_to_nhwc(dy), plan.cout_pad)
     dw = tg.tap_wgrad(src, dyn, plan.taps, d.H_o, d.W_o,
                       cin_tile=plan.cin_tile, cout_tile=plan.cout_tile,
                       oh_tile=plan.oh_tile, ow_tile=plan.ow_tile,
                       interpret=INTERPRET)
-    dw = dw[:, :d.C, :d.N].reshape(d.K_h, d.K_w, d.C, d.N)
+    dw = dw[:, :d.C, :d.N].reshape(d.k_taps_h, d.k_taps_w, d.C, d.N)
     return dw.transpose(3, 2, 0, 1).astype(x.dtype)

@@ -5,7 +5,9 @@ This is the TPU-native datapath of BP-im2col.  The paper's RTL address
 generators turn a virtual zero-spaced lowered matrix into fetches of compact
 data; here the same mapping is resolved *statically* into a list of "taps"
 ``(plane, du, dv)`` over a phase-split compact tensor, and the kernel is a
-dense multi-tap GEMM:
+dense multi-tap GEMM (the tap tables are built per axis by ``ops.py``, so
+the list is exactly the REAL taps: asymmetric strides and dilated kernels
+change the table, never the kernel bodies below):
 
     out[b, oh, ow, :COUT] += src[plane, b, oh+du, ow+dv, :CIN] @ w[tap]
 
@@ -29,9 +31,11 @@ the Pallas path instead of falling back.
 
 Grid conventions (contraction dims INNERMOST so f32 scratch accumulates):
   tap_gemm        grid = (B, n_th, n_tw, cout_steps, cin_steps)
-  tap_gemm_phased grid = (S*S, B, n_th, n_tw, cout_steps, cin_steps); the
-                  leading phase dim selects the per-phase weight block and
-                  tap table, nothing else -- one pallas_call per conv.
+  tap_gemm_phased grid = (PH, B, n_th, n_tw, cout_steps, cin_steps) with
+                  PH = s_h*s_w output stride phases (per-axis, so
+                  asymmetric strides just change PH); the leading phase dim
+                  selects the per-phase weight block and tap table, nothing
+                  else -- one pallas_call per conv.
   tap_wgrad       grid = (cin_steps, cout_steps, B, n_th, n_tw); batch and
                   space are contraction dims, accumulated in an f32 VMEM
                   scratch and flushed to the output block exactly once.

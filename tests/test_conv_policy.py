@@ -244,18 +244,25 @@ def test_train_step_threads_mixed_policy_to_dispatch():
 
 
 def test_fallback_reasons_are_recorded(rng):
-    """A capability-gated slot (pallas on an asymmetric stride) resolves to
-    a capable engine AND records why."""
-    x = jnp.asarray(rng.randn(1, 2, 8, 8), jnp.float32)
+    """A capability-gated slot resolves to a capable engine AND records
+    why.  Asymmetric strides are served natively by the per-axis tap
+    tables now, so the built-in gate exercised here is the paper-geometry
+    constraint (P > K-1)."""
+    x = jnp.asarray(rng.randn(1, 2, 12, 12), jnp.float32)
     w = jnp.asarray(rng.randn(2, 2, 3, 3), jnp.float32)
-    spec = ConvSpec.make(stride=(1, 2), padding=1)
+    spec = ConvSpec.make(stride=2, padding=3)   # P > K-1: outside the paper
     reset_dispatch_events()
     conv2d(x, w, spec, "pallas")
     ev = dispatch_events()
-    assert ev.get("forward:bp_phase", 0) >= 1, ev       # gated off pallas
+    assert ev.get("forward:lax", 0) >= 1, ev    # only lax serves this
     decs = [d for d in policy_decisions()
             if d["pass"] == "forward" and d["requested"] == "pallas"]
-    assert decs and "asymmetric stride" in decs[0]["reason"], decs
+    assert decs and "outside the paper" in decs[0]["reason"], decs
+    # The flip side of PR 4: an asymmetric stride is NOT a capability gap
+    # any more -- pallas keeps the pass.
+    reset_dispatch_events()
+    conv2d(x, w, ConvSpec.make(stride=(1, 2), padding=1), "pallas")
+    assert dispatch_events().get("forward:pallas", 0) >= 1
 
 
 def test_auto_policy_on_committed_bench_cases_is_all_pallas():
@@ -264,11 +271,16 @@ def test_auto_policy_on_committed_bench_cases_is_all_pallas():
     with open(REPO / "BENCH_kernels.json") as f:
         record = json.load(f)
     assert record["cases"], "empty benchmark baseline"
+    assert any(dm["dims"].get("S_w", -1) > 0 for dm in record["cases"]), \
+        "baseline lost its asymmetric-stride case"
+    assert any(dm["dims"].get("D_h", 1) > 1 for dm in record["cases"]), \
+        "baseline lost its dilated case"
     for case in record["cases"]:
         dm = case["dims"]
         d = ConvDims(B=dm["B"], C=dm["C"], H_i=dm["H_i"], W_i=dm["W_i"],
                      N=dm["N"], K_h=dm["K_h"], K_w=dm["K_w"], S=dm["S"],
-                     P_h=dm["P_h"], P_w=dm["P_w"])
+                     S_w=dm.get("S_w", -1), D_h=dm.get("D_h", 1),
+                     D_w=dm.get("D_w", 1), P_h=dm["P_h"], P_w=dm["P_w"])
         res = resolve_policy(d, "auto")
         for pass_name, info in res.items():
             assert info["engine"] == "pallas", (dm, pass_name, info)
@@ -295,13 +307,22 @@ def test_empty_output_plane_raises_for_every_engine(rng):
             conv2d(x, w, spec, policy)
 
 
-def test_conv_plan_report_asym_stride_degrades_gracefully():
+def test_conv_plan_report_covers_asym_and_dilated():
+    """Asymmetric strides and dilations are planner-eligible: per-axis tap
+    tables plan them like any other geometry, and the dilated tap count
+    reflects the zero-skipping (real taps, not the zero-dilated extent)."""
     from repro.core.conv import conv_plan_report
     rep = conv_plan_report((2, 4, 12, 12), (8, 4, 3, 3), stride=(1, 2),
                            padding=1)
-    assert rep == {"pallas_path": False, "reason": "asymmetric stride"}
+    assert rep["pallas_path"] is True
+    assert rep["phases"] == 2                    # s_h * s_w = 1 * 2
     assert conv_plan_report((2, 4, 12, 12), (8, 4, 3, 3), stride=2,
                             padding=1)["pallas_path"] is True
+    rep2 = conv_plan_report((2, 4, 12, 12), (8, 4, 3, 3), stride=2,
+                            padding=2, dilation=2)
+    assert rep2["pallas_path"] is True
+    assert rep2["kernel_taps"] == {"real": 9, "materialized": 25}
+    assert rep2["forward"]["taps"] == 9          # not 25: zeros skipped
 
 
 def test_policy_report_shapes():
@@ -311,8 +332,9 @@ def test_policy_report_shapes():
     assert rep["plan"]["pallas_path"] is True
     rep2 = policy_report((2, 16, 32, 32), (32, 16, 3, 3),
                          ConvSpec.make(stride=(1, 2), padding=1), "auto")
-    assert rep2["pallas_path"] is False
-    assert rep2["plan"]["reason"] == "asymmetric stride"
+    assert rep2["pallas_path"] is True           # per-axis tap tables
+    assert rep2["plan"]["pallas_path"] is True
+    assert rep2["plan"]["phases"] == 2
 
 
 # ---------------------------------------------------------------------------
@@ -484,6 +506,29 @@ def test_no_raw_mode_strings_outside_shim():
     out = subprocess.run(
         [sys.executable, str(REPO / "scripts" / "check_no_raw_mode.py"),
          str(REPO)],
+        capture_output=True, text=True)
+    assert out.returncode == 0, out.stderr or out.stdout
+
+
+def test_docs_capability_matrix_matches_registry():
+    """The docs lane's code-vs-docs gate: docs/ENGINES.md capability matrix
+    == the ENGINES registry's declared flags."""
+    env = dict(os.environ,
+               PYTHONPATH=str(REPO / "src") + os.pathsep
+               + os.environ.get("PYTHONPATH", ""))
+    out = subprocess.run(
+        [sys.executable,
+         str(REPO / "scripts" / "check_docs_capabilities.py"), str(REPO)],
+        capture_output=True, text=True, env=env)
+    assert out.returncode == 0, out.stderr or out.stdout
+
+
+def test_markdown_links_resolve():
+    """The docs lane's link gate: every relative link in docs/ + README
+    points at an existing file (and anchor)."""
+    out = subprocess.run(
+        [sys.executable,
+         str(REPO / "scripts" / "check_markdown_links.py"), str(REPO)],
         capture_output=True, text=True)
     assert out.returncode == 0, out.stderr or out.stdout
 

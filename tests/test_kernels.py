@@ -20,6 +20,11 @@ CONV_CASES = [
     ConvDims(B=2, C=2, H_i=12, W_i=12, N=3, K_h=3, K_w=3, S=3, P_h=1, P_w=1),
     ConvDims(B=1, C=3, H_i=8, W_i=8, N=4, K_h=3, K_w=3, S=1, P_h=1, P_w=1),
     ConvDims(B=1, C=130, H_i=6, W_i=6, N=140, K_h=3, K_w=3, S=2, P_h=1, P_w=1),
+    # Asymmetric strides: per-axis tap tables (s_h x s_w phase grid).
+    ConvDims(B=1, C=3, H_i=10, W_i=12, N=4, K_h=3, K_w=3, S=2, S_w=3,
+             P_h=1, P_w=1),
+    ConvDims(B=2, C=2, H_i=9, W_i=12, N=3, K_h=3, K_w=3, S=1, S_w=2,
+             P_h=0, P_w=1),
 ]
 
 
@@ -32,7 +37,7 @@ def _data(d, dtype=jnp.float32, seed=0):
 
 
 @pytest.mark.parametrize("d", CONV_CASES,
-                         ids=lambda d: f"S{d.S}K{d.K_h}C{d.C}N{d.N}")
+                         ids=lambda d: f"S{d.s_h}x{d.s_w}K{d.K_h}C{d.C}N{d.N}")
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16], ids=["f32", "bf16"])
 class TestConvKernels:
     def test_forward(self, d, dtype):
