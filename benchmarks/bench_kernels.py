@@ -21,20 +21,27 @@ the hardware-independent quantities -- they are what future TPU runs
 ``--tiny`` runs one small shape with 1 rep (the CI smoke lane) and FAILS if
 any case falls off the Pallas path: a tile-plan fallback counter > 0 OR the
 ``auto`` policy resolving any pass of any tiny case to a non-pallas engine.
-``--json`` writes the machine-readable record (schema 3): per-case
+``--json`` writes the machine-readable record (schema 4): per-case
 wall-clock, bytes-moved ratios, tile plans (fits / spatial splits / VMEM
 footprint), per-pass auto-policy resolution, the per-case tap counts
 (``taps.real`` vs ``taps.materialized`` -- the dilated case's skip_ratio
 shows the ~1/(d_h*d_w) zero-skipping), and the planner's hit/fallback
 event counts.  The case list includes an asymmetric-stride (2, 3) layer
 and a dilated (d=2) layer, both of which the per-axis tap tables keep on
-the Pallas path.  The committed ``BENCH_kernels.json`` is the perf
+the Pallas path, plus TRANSPOSED-conv forward cases (a stride-2 decoder
+stage and a stride-2 + dilated-kernel stage): their records carry
+``taps{real, zero_inserted, skip_ratio}`` -- the taps the fused phase
+plan runs vs what a stride-1 conv over the physically zero-inserted
+input would run, ``skip_ratio ~ 1 - 1/(s_h*s_w)`` -- and the bench FAILS
+outright if a transposed case's ``real`` is not strictly below
+``zero_inserted``.  The committed ``BENCH_kernels.json`` is the perf
 baseline.  ``--compare PATH`` re-runs the bench and exits non-zero if any
 shared timing column slowed down by more than ``--tolerance`` (default
 35%, re-measured once so only REPRODUCED slowdowns fail -- interpret-mode
 CPU wall-clock is long-tailed), any case that previously stayed on the
 Pallas path now falls back, or a case's Pallas tap count grew
-(zero-skipping regressed).
+(zero-skipping regressed -- the gate covers the transposed cases'
+``taps.real`` identically).
 """
 
 from __future__ import annotations
@@ -51,8 +58,10 @@ import numpy as np
 sys.path.insert(0, "src")
 
 from repro.core import bpim2col, im2col_ref, phase_decomp   # noqa: E402
-from repro.core.conv import conv2d, resolve_policy          # noqa: E402
-from repro.core.convspec import ConvSpec                    # noqa: E402
+from repro.core.conv import (conv2d, conv2d_transpose,      # noqa: E402
+                             resolve_policy, transpose_dims,
+                             transpose_tap_counts)
+from repro.core.convspec import ConvSpec, ConvTransposeSpec  # noqa: E402
 from repro.core.im2col_ref import ConvDims                  # noqa: E402
 from repro.kernels import ops                               # noqa: E402
 
@@ -77,6 +86,27 @@ TINY_CASES = [
     ConvDims(B=1, C=4, H_i=12, W_i=12, N=8, K_h=3, K_w=3, S=2, P_h=1, P_w=1),
 ]
 
+# Transposed convolution AS A FORWARD LAYER (decoders / GAN generators):
+# (x_shape NCHW, w_shape (C_in, C_out/g, K, K), ConvTransposeSpec).  The
+# stride is the lhs (input) dilation; the tap-native path runs the fused
+# phase plan over the compact input while the zero-insertion lowering
+# ("traditional") physically builds the zero-spaced tensor.
+TRANSPOSE_CASES = [
+    # Stride-2 decoder stage: 16x16 -> 32x32 (pad 1, output_padding 1).
+    ((2, 32, 16, 16), (32, 16, 3, 3),
+     ConvTransposeSpec.make(stride=2, padding=1, output_padding=1)),
+    # Stride-2 + dilated 3x3 kernel (d=2, effective extent 5): lhs AND rhs
+    # dilation zero-skipping compose.
+    ((2, 16, 16, 16), (16, 16, 3, 3),
+     ConvTransposeSpec.make(stride=2, padding=2, output_padding=1,
+                            dilation=2)),
+]
+
+TINY_TRANSPOSE_CASES = [
+    ((1, 8, 8, 8), (8, 4, 3, 3),
+     ConvTransposeSpec.make(stride=2, padding=1, output_padding=1)),
+]
+
 # End-to-end jax.grad policies: uniform engines (the old mode matrix), the
 # shape-dependent auto default, and a mixed per-pass policy exercising three
 # different engines in one backward.
@@ -87,6 +117,16 @@ GRAD_POLICIES = (
     ("pallas", "pallas"),
     ("auto", "auto"),
     ("mixed", "fwd=lax,dgrad=pallas,wgrad=bp_phase"),
+)
+
+# Transposed-case policies: the zero-insertion materialization baseline
+# ("traditional"), the implicit engines, and a mixed per-pass policy.
+GRAD_POLICIES_T = (
+    ("traditional", "traditional"),
+    ("bp_phase", "bp_phase"),
+    ("pallas", "pallas"),
+    ("auto", "auto"),
+    ("mixed", "fwd=pallas,dgrad=bp_phase,wgrad=bp_im2col"),
 )
 
 
@@ -136,6 +176,48 @@ def _bytes_moved(d: ConvDims) -> dict[str, float]:
         "grad_extra_storage_elems": grad["extra_storage"],
         "lowered_sparsity": round(bpim2col.lowered_sparsity_loss(d), 3),
     }
+
+
+def _t_grad_fn(spec: ConvTransposeSpec, policy: str):
+    """jit'd jax.grad through the conv2d_transpose custom_vjp."""
+    @jax.jit
+    def g(x, w):
+        return jax.grad(
+            lambda a, b: jnp.sum(conv2d_transpose(a, b, spec, policy) ** 2),
+            argnums=(0, 1))(x, w)
+    return g
+
+
+def run_transpose(csv=True, tcases=None, reps=5,
+                  grad_policies=GRAD_POLICIES_T):
+    """Timing rows for the transposed (lhs-dilation) forward-layer cases:
+    end-to-end forward and jax.grad per policy -- "traditional" is the
+    physical zero-insertion materialization the implicit engines avoid."""
+    rng = np.random.RandomState(1)
+    rows = []
+    for x_shape, w_shape, spec in tcases if tcases is not None \
+            else TRANSPOSE_CASES:
+        x = jnp.asarray(rng.randn(*x_shape), jnp.float32)
+        w = jnp.asarray(rng.randn(*w_shape), jnp.float32)
+        d = transpose_dims(x_shape, w_shape, spec)
+        dil = f"/d{spec.d_h}x{spec.d_w}" if spec.has_dilation else ""
+        row = {"case": f"T:{x_shape[2]}/{x_shape[1]}/{w_shape[1]}/"
+                       f"{w_shape[2]}/{spec.s_h}x{spec.s_w}/"
+                       f"{spec.padding[0][0]}+op{spec.op_h}{dil}"}
+        for label, policy in grad_policies:
+            fwd = jax.jit(lambda a, b, p=policy:
+                          conv2d_transpose(a, b, spec, p))
+            row[f"fwdT_{label}_us"] = round(_t(fwd, x, w, reps=reps), 1)
+            row[f"gradT_{label}_us"] = round(
+                _t(_t_grad_fn(spec, policy), x, w, reps=reps), 1)
+        tap = transpose_tap_counts(d)
+        row["taps_skip_ratio"] = tap["skip_ratio"]
+        rows.append(row)
+    if csv and rows:
+        print(",".join(rows[0].keys()))
+        for r in rows:
+            print(",".join(str(v) for v in r.values()))
+    return rows
 
 
 def run(csv=True, cases=None, reps=5, grad_policies=GRAD_POLICIES):
@@ -190,7 +272,46 @@ def _auto_resolution(d: ConvDims) -> dict[str, str]:
     return {p: v["engine"] for p, v in resolve_policy(d, "auto").items()}
 
 
-def _json_record(rows, cases) -> dict:
+def _transpose_record_cases(trows, tcases) -> list[dict]:
+    """Per-transposed-case records: the mirror-conv tile plans, the
+    zero-insertion tap accounting (``taps.real`` vs ``taps.zero_inserted``
+    -- ``skip_ratio ~ 1 - 1/(s_h*s_w)`` is the lhs-dilation skipping), and
+    the per-pass auto-policy resolution over the mirror dims."""
+    out = []
+    for (x_shape, w_shape, spec), row in zip(tcases, trows):
+        d = transpose_dims(x_shape, w_shape, spec)
+        plan = ops.plan_report(d)
+        auto = {p: v["engine"] for p, v in
+                resolve_policy(d, "auto", transposed=True).items()}
+        taps = transpose_tap_counts(d)
+        if taps["real"] >= taps["zero_inserted"]:
+            # Structural gate (explicit raise: must not evaporate under
+            # python -O the way a bare assert would).
+            raise SystemExit(
+                "transposed case runs no fewer taps than the zero-inserted "
+                f"materialization: {taps}")
+        out.append({
+            "dims": {"transpose": True, "B": x_shape[0], "C": x_shape[1],
+                     "H_i": x_shape[2], "W_i": x_shape[3],
+                     "N": w_shape[1] * spec.groups,
+                     "K_h": w_shape[2], "K_w": w_shape[3],
+                     "S": spec.s_h, "S_w": spec.s_w,
+                     "D_h": spec.d_h, "D_w": spec.d_w,
+                     "P_h": spec.padding[0][0], "P_w": spec.padding[1][0],
+                     "op_h": spec.op_h, "op_w": spec.op_w},
+            "timings_us": row,
+            "plan": plan,
+            "taps": taps,
+            "auto_policy": auto,
+            "auto_all_pallas": all(e == "pallas" for e in auto.values()),
+            "fits": plan["pallas_path"],
+            "input_grad_plan_none": not plan["input_grad"].get("fused",
+                                                               False),
+        })
+    return out
+
+
+def _json_record(rows, cases, trows=(), tcases=()) -> dict:
     """Attach the static tile plans + traffic ratios + per-pass auto-policy
     resolution to the timing rows."""
     cases = list(cases)
@@ -218,11 +339,12 @@ def _json_record(rows, cases) -> dict:
             "input_grad_plan_none": not plan["input_grad"].get("fused",
                                                                False),
         })
+    record_cases.extend(_transpose_record_cases(trows, tcases))
     events = ops.plan_events()
     fallbacks = sum(v for k, v in events.items() if k.endswith("_fallback"))
     return {
         "bench": "bench_kernels",
-        "schema": 3,
+        "schema": 4,
         "vmem_budget_bytes": ops.VMEM_BUDGET_BYTES,
         "interpret": ops.INTERPRET,
         "cases": record_cases,
@@ -310,13 +432,16 @@ def main():
                          "tighten it for real-TPU comparisons")
     args = ap.parse_args()
     cases = TINY_CASES if args.tiny else CASES
+    tcases = TINY_TRANSPOSE_CASES if args.tiny else TRANSPOSE_CASES
     reps = 1 if args.tiny else 10
     ops.clear_tile_plan_cache()
     ops.reset_plan_events()
     rows = run(cases=cases, reps=reps)
-    assert rows and all(v > 0 for r in rows for k, v in r.items()
-                        if k.endswith("_us")), "bench produced no timings"
-    record = _json_record(rows, cases)
+    trows = run_transpose(tcases=tcases, reps=reps)
+    assert rows and trows and all(
+        v > 0 for r in (*rows, *trows) for k, v in r.items()
+        if k.endswith("_us")), "bench produced no timings"
+    record = _json_record(rows, cases, trows, tcases)
     if args.json:
         with open(args.json, "w") as f:
             json.dump(record, f, indent=2, sort_keys=True)
@@ -349,7 +474,10 @@ def main():
             ops.clear_tile_plan_cache()
             ops.reset_plan_events()
             record2 = _json_record(run(csv=False, cases=cases, reps=reps),
-                                   cases)
+                                   cases,
+                                   run_transpose(csv=False, tcases=tcases,
+                                                 reps=reps),
+                                   tcases)
             keys2 = {p.split(":", 1)[0]
                      for p in compare_records(record2, baseline,
                                               args.tolerance)}

@@ -4,13 +4,14 @@ agree with the conv engines' declared capability flags.
 
 The matrix is the markdown table whose header row is exactly
 
-    | engine | asym_stride | dilation | paper_geometry |
+    | engine | asym_stride | dilation | transpose | paper_geometry |
 
 Each built-in engine must have a row, and each cell must match the
 registry (``repro.core.conv.ENGINES``):
 
     asym_stride     -> "yes" / "no"    from Engine.asym_stride
     dilation        -> "native" / "materialize"  from Engine.native_dilation
+    transpose       -> "native" / "materialize"  from Engine.native_transpose
     paper_geometry  -> "yes" / "no"    from Engine.paper_geometry
 
 Run from the repo root (CI docs lane + tier-1 test):
@@ -24,17 +25,18 @@ import pathlib
 import re
 import sys
 
-HEADER = ("engine", "asym_stride", "dilation", "paper_geometry")
+HEADER = ("engine", "asym_stride", "dilation", "transpose",
+          "paper_geometry")
 
 
 def _cells(line: str) -> list[str]:
     return [c.strip().strip("`") for c in line.strip().strip("|").split("|")]
 
 
-def parse_matrix(text: str) -> dict[str, tuple[str, str, str]]:
-    """engine name -> (asym_stride, dilation, paper_geometry) cells."""
+def parse_matrix(text: str) -> dict[str, tuple[str, ...]]:
+    """engine name -> (asym_stride, dilation, transpose, paper_geometry)."""
     lines = text.splitlines()
-    rows: dict[str, tuple[str, str, str]] = {}
+    rows: dict[str, tuple[str, ...]] = {}
     for i, line in enumerate(lines):
         if tuple(_cells(line)) != HEADER:
             continue
@@ -44,18 +46,19 @@ def parse_matrix(text: str) -> dict[str, tuple[str, str, str]]:
             cells = _cells(row)
             if len(cells) != len(HEADER) or set(cells[1]) <= {"-"}:
                 continue
-            rows[cells[0]] = (cells[1], cells[2], cells[3])
+            rows[cells[0]] = tuple(cells[1:])
         return rows
     raise SystemExit(
         "docs/ENGINES.md: capability-matrix header row "
         f"{' | '.join(HEADER)!r} not found")
 
 
-def expected() -> dict[str, tuple[str, str, str]]:
+def expected() -> dict[str, tuple[str, ...]]:
     from repro.core.conv import ENGINES
     return {
         name: ("yes" if e.asym_stride else "no",
                "native" if e.native_dilation else "materialize",
+               "native" if e.native_transpose else "materialize",
                "yes" if e.paper_geometry else "no")
         for name, e in ENGINES.items()
     }

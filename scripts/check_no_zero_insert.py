@@ -1,0 +1,78 @@
+#!/usr/bin/env python
+"""Grep-lint: no hand-rolled zero-insertion upsampling outside ``core/``.
+
+The whole point of the transposed-conv subsystem (``ConvTransposeSpec`` +
+``conv2d_transpose``) is that lhs dilation is resolved at PLAN time -- the
+zero-spaced tensor is never built.  A call site that zero-inserts by hand
+(a ``jnp.zeros`` buffer scattered into with a strided ``.at[::s].set`` --
+the classic upsampling idiom) silently re-materializes exactly the
+zero-space the paper eliminates, off the engines' books.
+
+This script fails CI when the strided-scatter idiom (or an explicit
+``lax.pad`` interior dilation) sneaks into src/, examples/, benchmarks/ or
+scripts/ outside ``src/repro/core`` -- the engines' own implementation
+(``zero_insert``, the phase decomposition's per-phase writeback, the
+materialization oracle) is the ONLY place it may live.  New upsampling
+call sites go through ``repro.core.conv2d_transpose``.
+
+    python scripts/check_no_zero_insert.py [root]
+"""
+
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+PATTERNS = [
+    # .at[..., ::s_h, ::s_w].set(x) -- strided scatter into a zeros buffer
+    re.compile(r"\.at\[[^\]]*::[^\]]*\]\s*\.set\("),
+    # lax.pad(..., (lo, hi, interior>0)) spelled with an explicit interior
+    # dilation variable is hard to grep exactly; catch the canonical
+    # zero-insertion helper being re-implemented under a local name.
+    re.compile(r"def\s+zero_insert\w*\("),
+]
+
+SCAN_DIRS = ("src", "examples", "benchmarks", "scripts")
+
+# The engines' own implementation of zero-space (the explicit baseline,
+# the phase writeback, the materialization oracle) and this linter.
+ALLOWED_PREFIXES = ("src/repro/core/",)
+ALLOWED = {pathlib.PurePosixPath("scripts/check_no_zero_insert.py")}
+
+
+def scan(root: pathlib.Path) -> list[str]:
+    hits = []
+    for d in SCAN_DIRS:
+        base = root / d
+        if not base.is_dir():
+            continue
+        for path in sorted(base.rglob("*.py")):
+            rel = pathlib.PurePosixPath(path.relative_to(root).as_posix())
+            if rel in ALLOWED or str(rel).startswith(ALLOWED_PREFIXES):
+                continue
+            for lineno, line in enumerate(
+                    path.read_text(encoding="utf-8").splitlines(), 1):
+                for pat in PATTERNS:
+                    if pat.search(line):
+                        hits.append(f"{rel}:{lineno}: {line.strip()}")
+    return hits
+
+
+def main(argv: list[str]) -> int:
+    root = pathlib.Path(argv[1]) if len(argv) > 1 else \
+        pathlib.Path(__file__).resolve().parent.parent
+    hits = scan(root)
+    if hits:
+        print("hand-rolled zero-insertion upsampling outside core/ "
+              "(use repro.core.conv2d_transpose):", file=sys.stderr)
+        for h in hits:
+            print("  " + h, file=sys.stderr)
+        return 1
+    print(f"ok: no hand-rolled zero-insertion upsampling outside core/ "
+          f"({', '.join(SCAN_DIRS)})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv))

@@ -82,8 +82,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import bpim2col, im2col_ref, phase_decomp
-from repro.core.convspec import AUTO, ConvSpec, EnginePolicy
-from repro.core.im2col_ref import ConvDims, zero_insert
+from repro.core.convspec import (AUTO, ConvSpec, ConvTransposeSpec,
+                                 EnginePolicy)
+from repro.core.im2col_ref import ConvDims, rot180, zero_insert
 
 Mode = str   # legacy alias: engine names are plain strings now
 
@@ -106,6 +107,14 @@ class Engine:
     #                                dilation zero taps itself; False means
     #                                the dispatcher materializes the dilated
     #                                kernel before/after the engine runs
+    native_transpose: bool = False  # serves a TRANSPOSED-conv forward
+    #                                 implicitly (role-swapped onto its
+    #                                 input_grad machinery, zero insertion
+    #                                 never built); False means the
+    #                                 dispatcher physically zero-inserts the
+    #                                 input and runs the engine's ordinary
+    #                                 stride-1 forward -- the materialization
+    #                                 lowering that doubles as the oracle
 
 
 def _pallas_forward(x, w, d):
@@ -148,6 +157,7 @@ def register_engine(name: str, forward: Callable, input_grad: Callable,
                     weight_grad: Callable, *, asym_stride: bool = False,
                     paper_geometry: bool = True,
                     native_dilation: bool = False,
+                    native_transpose: bool = False,
                     overwrite: bool = False) -> Engine:
     """Register a conv engine under ``name`` for use in any ``EnginePolicy``.
 
@@ -159,8 +169,15 @@ def register_engine(name: str, forward: Callable, input_grad: Callable,
     COMPACT kernel and handles ``d.D_h``/``d.D_w`` itself (skipping zero
     taps) -- without it, the dispatcher hands the engine a materialized
     zero-dilated kernel of extent ``K_eff`` and slices the real taps back
-    out of its weight gradient.  Re-registering an existing name requires
-    ``overwrite=True``.
+    out of its weight gradient.  ``native_transpose`` declares that the
+    engine's ``input_grad`` implements the paper's transposed mode WITHOUT
+    building the zero-spaced tensor, so a transposed-conv *forward* may be
+    role-swapped onto it (and its ``forward``/``weight_grad`` serve the
+    transposed layer's dX/dW, which are ordinary regular-conv passes) --
+    without it, the dispatcher physically zero-inserts the input and runs
+    the engine's ordinary stride-1 forward (the materialization lowering,
+    kept as the cross-check oracle).  Re-registering an existing name
+    requires ``overwrite=True``.
     """
     if name == AUTO or not name:
         raise ValueError(f"invalid engine name {name!r}")
@@ -169,25 +186,29 @@ def register_engine(name: str, forward: Callable, input_grad: Callable,
                          "(pass overwrite=True to replace it)")
     eng = Engine(name, forward, input_grad, weight_grad,
                  asym_stride=asym_stride, paper_geometry=paper_geometry,
-                 native_dilation=native_dilation)
+                 native_dilation=native_dilation,
+                 native_transpose=native_transpose)
     ENGINES[name] = eng
     return eng
 
 
 register_engine("lax", im2col_ref.conv2d_lax, _lax_input_grad,
-                _lax_weight_grad, asym_stride=True, paper_geometry=False)
+                _lax_weight_grad, asym_stride=True, paper_geometry=False,
+                native_transpose=True)
 register_engine("traditional", im2col_ref.conv2d_forward_explicit,
                 im2col_ref.input_grad_explicit,
                 im2col_ref.weight_grad_explicit, asym_stride=True)
 register_engine("bp_im2col", im2col_ref.conv2d_forward_explicit,
                 bpim2col.input_grad_implicit,
-                bpim2col.weight_grad_implicit, asym_stride=True)
+                bpim2col.weight_grad_implicit, asym_stride=True,
+                native_transpose=True)
 register_engine("bp_phase", im2col_ref.conv2d_lax,
                 phase_decomp.input_grad_phase,
-                phase_decomp.weight_grad_phase, asym_stride=True)
+                phase_decomp.weight_grad_phase, asym_stride=True,
+                native_transpose=True)
 register_engine("pallas", _pallas_forward, _pallas_input_grad,
                 _pallas_weight_grad, asym_stride=True,
-                native_dilation=True)
+                native_dilation=True, native_transpose=True)
 
 #: the built-in engine names (legacy export; registry may grow beyond it).
 MODES: tuple[str, ...] = tuple(ENGINES)
@@ -245,6 +266,93 @@ def spec_dims(x_shape, w_shape, spec: ConvSpec) -> ConvDims:
             f"(dilation {spec.dilation}), stride {spec.stride}, "
             f"padding {spec.padding}")
     return d
+
+
+def transpose_dims(x_shape, w_shape, spec: ConvTransposeSpec) -> ConvDims:
+    """Per-group ``ConvDims`` of the MIRROR regular conv of a transposed
+    layer.
+
+    A transposed conv with forward stride ``s`` *is* the input gradient
+    (the paper's transposed mode) of a regular conv whose output plane is
+    the transposed layer's input: its ``ConvDims`` carry the transposed
+    spec's stride/dilation/padding verbatim, its input plane is the
+    transposed layer's OUTPUT, and ``output_padding`` lands exactly on the
+    tiling remainder ``R`` (the extra high-side rows/cols the mirror
+    conv's last stride window does not reach -- already first-class since
+    the engines support general ``R``).  Every engine pass of the
+    transposed layer is then a role-swap of the mirror conv's passes:
+
+        forward      -> mirror input_grad   (Algorithm 1 / tap-GEMM phases)
+        input grad   -> mirror forward      (an ordinary strided conv)
+        weight grad  -> mirror weight_grad  (Algorithm 2, roles swapped)
+
+    Weights ``(C_in, C_out/g, K_h, K_w)`` are the mirror conv's OIHW
+    weights unchanged (``N = C_in/g`` per group, ``C = C_out/g``).
+    """
+    b, cin, h, w = x_shape
+    cin2, cog, kh, kw = w_shape
+    g = spec.groups
+    assert cin == cin2, (
+        f"channel mismatch: input C={cin}, weight C_in={cin2}")
+    assert cin % g == 0, f"C_in={cin} not divisible by groups={g}"
+    keff_h, keff_w = spec.effective_kernel(kh, kw)
+    (ph_lo, ph_hi), (pw_lo, pw_hi) = spec.padding
+    h_out, w_out = spec.output_shape(h, w, kh, kw)
+    if h_out < 1 or w_out < 1:
+        raise ValueError(
+            f"transposed-conv output plane is empty ({h_out}x{w_out}): "
+            f"input {h}x{w}, effective kernel {keff_h}x{keff_w} "
+            f"(dilation {spec.dilation}), stride {spec.stride}, "
+            f"padding {spec.padding}, output_padding {spec.output_padding}")
+    d = ConvDims(B=b, C=cog, H_i=h_out, W_i=w_out, N=cin // g,
+                 K_h=keff_h, K_w=keff_w,
+                 S=spec.s_h, S_w=(-1 if spec.s_w == spec.s_h else spec.s_w),
+                 P_h=ph_lo, P_w=pw_lo, P_h_hi=ph_hi, P_w_hi=pw_hi,
+                 D_h=spec.d_h, D_w=spec.d_w)
+    # The mirror conv must reproduce the transposed layer's input plane
+    # exactly, with output_padding as the remainder (guaranteed by the
+    # spec's 0 <= output_padding < stride validation).
+    assert d.H_o == h and d.W_o == w, (d, x_shape, spec)
+    assert d.R_h == spec.op_h and d.R_w == spec.op_w, (d, spec)
+    return d
+
+
+def conv_transpose_output_shape(x_shape, w_shape,
+                                spec: ConvTransposeSpec) \
+        -> tuple[int, int, int, int]:
+    """The exact output shape of ``conv2d_transpose`` in the spec's layout:
+    (B, C_out, H_out, W_out) for NCHW, (B, H_out, W_out, C_out) for NHWC."""
+    b = x_shape[0]
+    cout = w_shape[1] * spec.groups
+    h, w = (x_shape[2], x_shape[3]) if spec.layout == "NCHW" \
+        else (x_shape[1], x_shape[2])
+    h_out, w_out = spec.output_shape(h, w, w_shape[2], w_shape[3])
+    if spec.layout == "NHWC":
+        return b, h_out, w_out, cout
+    return b, cout, h_out, w_out
+
+
+def transpose_tap_counts(d: ConvDims) -> dict[str, object]:
+    """The zero-insertion accounting of one transposed-conv forward.
+
+    ``real`` is the number of tap-GEMMs the fused phase plan actually runs
+    across all ``s_h*s_w`` output phases (every real kernel tap belongs to
+    exactly one phase, so full coverage totals ``k_taps_h * k_taps_w``);
+    ``zero_inserted`` is what a stride-1 dense conv over the physically
+    zero-inserted input would run over the same phase grid
+    (``s_h*s_w*K_eff_h*K_eff_w``).  ``skip_ratio`` is therefore
+    ``1 - 1/(s_h*s_w)`` for a dense kernel, and folds in the additional
+    ``1/(d_h*d_w)`` kernel-dilation skipping."""
+    from repro.kernels import ops
+    pp = ops.input_grad_plan(d)
+    if pp is not None:
+        real = sum(len(t) for t in pp.phase_taps)
+    else:   # jnp phase-decomposition fallback: per-phase subsamples of the
+            # zero-dilated kernel (every effective position in one phase)
+        real = d.K_h * d.K_w
+    zero_inserted = d.s_h * d.s_w * d.K_h * d.K_w
+    return {"real": real, "zero_inserted": zero_inserted,
+            "skip_ratio": round(1.0 - real / zero_inserted, 3)}
 
 
 def _dilate_weight(w: jax.Array, spec: ConvSpec) -> jax.Array:
@@ -321,8 +429,16 @@ def _capability_gap(e: Engine, d: ConvDims) -> str | None:
     return None
 
 
-def _pallas_fits(pass_name: str, d: ConvDims) -> bool:
+#: transposed-conv pass -> the MIRROR regular-conv pass it role-swaps onto.
+_TRANSPOSE_ROLE = {"forward": "input_grad", "input_grad": "forward",
+                   "weight_grad": "weight_grad"}
+
+
+def _pallas_fits(pass_name: str, d: ConvDims,
+                 transposed: bool = False) -> bool:
     from repro.kernels import ops
+    if transposed:
+        pass_name = _TRANSPOSE_ROLE[pass_name]
     if pass_name == "forward":
         return ops.forward_plan(d).fits
     if pass_name == "input_grad":
@@ -340,8 +456,8 @@ def _first_capable(d: ConvDims, reason: str) -> tuple[str, str]:
     return "lax", reason
 
 
-def resolve_engine(requested: str, pass_name: str,
-                   d: ConvDims) -> tuple[str, str]:
+def resolve_engine(requested: str, pass_name: str, d: ConvDims,
+                   transposed: bool = False) -> tuple[str, str]:
     """One pass's selection: ``(engine actually used, reason)``.
 
     ``"auto"`` is the shape-dependent strategy: stride-1 undilated layers
@@ -352,6 +468,12 @@ def resolve_engine(requested: str, pass_name: str,
     whenever the tile plan fits, and everything else falls back down
     ``bp_phase -> lax`` with the reason recorded.  Explicit requests that
     the engine cannot serve resolve the same way -- recorded, not silent.
+
+    ``transposed=True`` resolves the pass of a TRANSPOSED conv over the
+    mirror dims ``d`` (see :func:`transpose_dims`): the tile planner
+    consulted is the role-swapped one (the transposed forward runs the
+    mirror input-grad phase plan), and ``"auto"`` keeps plannable
+    transposed specs on ``pallas`` -- the stride IS the zero-insertion.
     """
     if requested == AUTO:
         if d.s_h == 1 and d.s_w == 1 and not d.has_dilation:
@@ -362,7 +484,12 @@ def resolve_engine(requested: str, pass_name: str,
             return _first_capable(
                 d, "auto: stride 1, geometry outside implicit constraints")
         gap = _capability_gap(ENGINES["pallas"], d)
-        if gap is None and _pallas_fits(pass_name, d):
+        if gap is None and _pallas_fits(pass_name, d, transposed):
+            if transposed:
+                return "pallas", ("auto: transposed conv is the tap-GEMM "
+                                  "phase plan; zero insertion skipped at "
+                                  "plan time and the tile plan fits the "
+                                  "VMEM budget")
             if d.has_dilation:
                 return "pallas", ("auto: tap table skips the dilation zero "
                                   "taps and the tile plan fits the VMEM "
@@ -375,20 +502,23 @@ def resolve_engine(requested: str, pass_name: str,
     gap = _capability_gap(e, d)
     if gap is not None:
         return _first_capable(d, f"{requested} requested but {gap}")
-    if requested == "pallas" and not _pallas_fits(pass_name, d):
+    if requested == "pallas" and not _pallas_fits(pass_name, d, transposed):
         return _first_capable(
             d, "pallas requested but the tile plan exceeds the VMEM budget")
     return requested, "requested"
 
 
-def _dispatch(pass_name: str, requested: str, d: ConvDims) -> Engine:
-    name, reason = resolve_engine(requested, pass_name, d)
-    key = f"{pass_name}:{name}"
+def _dispatch(pass_name: str, requested: str, d: ConvDims,
+              transposed: bool = False) -> Engine:
+    name, reason = resolve_engine(requested, pass_name, d, transposed)
+    # Transposed-conv passes count under their own keys ("forward_T:pallas")
+    # so a decoder's dispatch is distinguishable from its encoder's.
+    key = f"{pass_name}{'_T' if transposed else ''}:{name}"
     DISPATCH_EVENTS[key] = DISPATCH_EVENTS.get(key, 0) + 1
     if len(POLICY_DECISIONS) < _MAX_DECISIONS:
         POLICY_DECISIONS.append({
             "pass": pass_name, "requested": requested, "engine": name,
-            "reason": reason,
+            "reason": reason, "transpose": transposed,
             "dims": (d.B, d.C, d.H_i, d.W_i, d.N, d.K_h, d.K_w,
                      d.s_h, d.s_w)})
     return ENGINES[name]
@@ -531,6 +661,153 @@ def _conv2d_bwd(spec, policy, res, dy):
 
 
 _conv2d.defvjp(_conv2d_fwd, _conv2d_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Transposed convolution: tap-native lhs dilation through the same engines
+# ---------------------------------------------------------------------------
+
+def conv2d_transpose_materialized(x: jax.Array, w: jax.Array,
+                                  spec: ConvTransposeSpec,
+                                  engine: str = "lax") -> jax.Array:
+    """The zero-insertion MATERIALIZATION of a transposed conv: physically
+    build the lhs-dilated input (``s - 1`` zeros between pixels, virtual
+    pad ``K_eff - 1 - p`` per side, ``output_padding`` extra rows/cols on
+    the high side), rotate/swap the (zero-dilated) kernel, and run an
+    ordinary stride-1 dense conv over the zero-spaced tensor.
+
+    This is what engines WITHOUT the ``native_transpose`` capability get
+    at dispatch, and it is the executable oracle the tap-native path is
+    tested against -- it pays exactly the reorganization + zero-FLOPs the
+    paper eliminates.  Differentiable (pure jax ops), so ``jax.grad`` of
+    it anchors the transposed VJP too.
+    """
+    eng = _engine(engine)
+    b, cin, h, wd = x.shape
+    g = spec.groups
+    cog = w.shape[1]
+    w_eff = _dilate_weight(w, spec)          # (C_in, C_out/g, Keff, Keff)
+    keff_h, keff_w = w_eff.shape[-2:]
+    (ph_lo, ph_hi), (pw_lo, pw_hi) = spec.padding
+    # lax.pad applies the interior (zero-insertion) dilation first, then
+    # the edge pads -- negative edge pads crop, so p > K_eff - 1 works too.
+    x_zi = jax.lax.pad(
+        x, jnp.zeros((), x.dtype),
+        [(0, 0, 0), (0, 0, 0),
+         (keff_h - 1 - ph_lo, keff_h - 1 - ph_hi + spec.op_h, spec.s_h - 1),
+         (keff_w - 1 - pw_lo, keff_w - 1 - pw_hi + spec.op_w, spec.s_w - 1)])
+    # Mirror OIHW weight of the stride-1 dense conv: rot180 + in/out swap.
+    wt = rot180(w_eff).reshape(g, cin // g, cog, keff_h, keff_w)
+    wt = wt.transpose(0, 2, 1, 3, 4).reshape(g * cog, cin // g,
+                                             keff_h, keff_w)
+    d1 = ConvDims(B=b, C=cin // g, H_i=x_zi.shape[2], W_i=x_zi.shape[3],
+                  N=cog, K_h=keff_h, K_w=keff_w, S=1)
+    return _forward(x_zi, wt, d1, eng, g)
+
+
+def _t_forward(x, w, d: ConvDims, eng: Engine, spec: ConvTransposeSpec):
+    """Transposed forward under one engine: role-swap onto the mirror
+    input-grad machinery when the engine is transpose-native (zero space
+    never built), else the physical zero-insertion lowering."""
+    if not eng.native_transpose:
+        return conv2d_transpose_materialized(x, w, spec, eng.name)
+    return _input_grad(x, _weight_for(eng, w, spec), d, eng, spec.groups)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def _conv2d_transpose(x: jax.Array, w: jax.Array, spec: ConvTransposeSpec,
+                      policy: EnginePolicy) -> jax.Array:
+    d = transpose_dims(x.shape, w.shape, spec)
+    eng = _dispatch("forward", policy.forward, d, transposed=True)
+    return _t_forward(x, w, d, eng, spec)
+
+
+def _conv2d_transpose_fwd(x, w, spec, policy):
+    d = transpose_dims(x.shape, w.shape, spec)
+    eng = _dispatch("forward", policy.forward, d, transposed=True)
+    return _t_forward(x, w, d, eng, spec), (x, w)
+
+
+def _conv2d_transpose_bwd(spec, policy, res, dy):
+    x, w = res
+    d = transpose_dims(x.shape, w.shape, spec)
+    eng_i = _dispatch("input_grad", policy.input_grad, d, transposed=True)
+    eng_w = _dispatch("weight_grad", policy.weight_grad, d, transposed=True)
+    # dX of a transposed conv is the mirror STRIDED regular conv of dy;
+    # dW is the mirror weight grad with the input/output roles swapped.
+    dx = _forward(dy, _weight_for(eng_i, w, spec), d, eng_i, spec.groups)
+    dw = _weight_grad(dy, x, d, eng_w, spec.groups)
+    if not eng_w.native_dilation:
+        dw = _undilate_dweight(dw, spec)
+    return dx.astype(x.dtype), dw.astype(w.dtype)
+
+
+_conv2d_transpose.defvjp(_conv2d_transpose_fwd, _conv2d_transpose_bwd)
+
+
+def _canon_transpose_call(args: tuple, kw: dict) \
+        -> tuple[ConvTransposeSpec, EnginePolicy | None]:
+    """conv2d_transpose(x, w, spec | policy, policy=..., <geometry kwargs>)
+    -- the structured surface only (this API postdates ``mode=``)."""
+    spec = kw.pop("spec", None)
+    policy = kw.pop("policy", None)
+    geom = {k: kw.pop(k) for k in ("stride", "padding", "output_padding",
+                                   "dilation", "groups", "layout")
+            if k in kw}
+    if kw:
+        raise TypeError(
+            f"conv2d_transpose got unexpected kwargs {sorted(kw)}")
+    args = list(args)
+    if args and isinstance(args[0], ConvTransposeSpec):
+        if spec is not None:
+            raise TypeError(
+                "ConvTransposeSpec given both positionally and as spec=")
+        spec = args.pop(0)
+    if args:
+        if policy is not None:
+            raise TypeError("policy given twice")
+        if not isinstance(args[0], (str, EnginePolicy)):
+            raise TypeError(
+                "expected a policy (str | EnginePolicy) after the spec, "
+                f"got {args[0]!r}")
+        policy = args.pop(0)
+    if args:
+        raise TypeError("too many positional arguments")
+    if spec is None:
+        spec = ConvTransposeSpec.make(**geom)
+    elif geom:
+        raise TypeError(
+            f"geometry given both in the ConvTransposeSpec and as kwargs "
+            f"{sorted(geom)}; put it all in the spec")
+    return spec, policy
+
+
+def conv2d_transpose(x: jax.Array, w: jax.Array, *args, **kwargs) \
+        -> jax.Array:
+    """NCHW x (C_in, C_out/g, K_h, K_w) -> NCHW TRANSPOSED convolution.
+
+    ``conv2d_transpose(x, w, spec: ConvTransposeSpec, policy=...)`` (or the
+    geometry kwargs ``stride= padding= output_padding= dilation= groups=
+    layout=``, which build the spec).  The stride is the input (lhs)
+    dilation; engines with the ``native_transpose`` capability never build
+    the zero-inserted input -- the forward IS the paper's transposed-mode
+    tap-GEMM over the mirror regular conv (:func:`transpose_dims`), one
+    fused launch across all ``s_h*s_w`` output phases on ``pallas``.  The
+    VJP lowers to the already-tested regular-conv engines: dX is the
+    mirror strided conv, dW the mirror weight grad with roles swapped.
+
+    ``policy`` selects the engine per pass exactly as for :func:`conv2d`
+    (``EnginePolicy`` / policy string / engine name / None for auto), and
+    a surrounding :func:`conv_policy` context overrides it.
+    ``spec.layout == "NHWC"`` transposes activations at the boundary.
+    """
+    spec, policy = _canon_transpose_call(args, kwargs)
+    policy = _validate_policy(effective_policy(policy))
+    if spec.layout == "NHWC":
+        y = _conv2d_transpose(jnp.transpose(x, (0, 3, 1, 2)), w,
+                              spec.with_layout("NCHW"), policy)
+        return jnp.transpose(y, (0, 2, 3, 1))
+    return _conv2d_transpose(x, w, spec, policy)
 
 
 # ---------------------------------------------------------------------------
@@ -711,14 +988,17 @@ def output_shape(d: ConvDims) -> tuple[int, int, int, int]:
 # Static introspection: what WOULD dispatch, and why
 # ---------------------------------------------------------------------------
 
-def resolve_policy(d: ConvDims, policy=None) -> dict[str, dict[str, str]]:
+def resolve_policy(d: ConvDims, policy=None,
+                   transposed: bool = False) -> dict[str, dict[str, str]]:
     """Pure per-pass resolution for one per-group geometry: no arrays, no
-    event recording.  ``{pass: {requested, engine, reason}}``."""
+    event recording.  ``{pass: {requested, engine, reason}}``.
+    ``transposed=True`` resolves over the mirror dims of a transposed conv
+    (the planners consulted are role-swapped per pass)."""
     p = _validate_policy(EnginePolicy.coerce(policy) if policy is not None
                          else DEFAULT_POLICY)
     out = {}
     for pass_name, requested in p.slots():
-        engine, reason = resolve_engine(requested, pass_name, d)
+        engine, reason = resolve_engine(requested, pass_name, d, transposed)
         out[pass_name] = {"requested": requested, "engine": engine,
                           "reason": reason}
     return out
@@ -728,12 +1008,25 @@ def policy_report(x_shape, w_shape, spec=None, policy=None) -> dict:
     """Static dispatch summary for one conv layer under one policy: the
     per-pass engines the resolver would pick (with reasons) plus the Pallas
     tile plans (the planners build per-axis tap tables, so asymmetric
-    strides and dilations plan like any other geometry)."""
-    spec = ConvSpec.coerce(spec)
-    d = spec_dims(x_shape, w_shape, spec)
+    strides and dilations plan like any other geometry).
+
+    ``spec`` may be a :class:`ConvTransposeSpec` (then ``w_shape`` is the
+    transposed ``(C_in, C_out/g, K_h, K_w)`` convention): the report plans
+    the MIRROR regular conv the transposed layer role-swaps onto, flags
+    ``"transpose": True``, and adds the zero-insertion tap accounting
+    (``taps.real`` vs ``taps.zero_inserted``)."""
     from repro.kernels import ops
-    report = {"passes": resolve_policy(d, policy), "spec": str(spec),
-              "plan": ops.plan_report(d)}
+    if isinstance(spec, ConvTransposeSpec):
+        d = transpose_dims(x_shape, w_shape, spec)
+        report = {"passes": resolve_policy(d, policy, transposed=True),
+                  "spec": str(spec), "transpose": True,
+                  "plan": ops.plan_report(d),
+                  "taps": transpose_tap_counts(d)}
+    else:
+        spec = ConvSpec.coerce(spec)
+        d = spec_dims(x_shape, w_shape, spec)
+        report = {"passes": resolve_policy(d, policy), "spec": str(spec),
+                  "transpose": False, "plan": ops.plan_report(d)}
     report["pallas_path"] = all(
         v["engine"] == "pallas" for v in report["passes"].values())
     return report

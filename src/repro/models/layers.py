@@ -16,7 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import conv as C
-from repro.core.convspec import ConvSpec
+from repro.core.convspec import ConvSpec, ConvTransposeSpec
 
 
 def _maybe_stack(shape, L):
@@ -93,6 +93,43 @@ def conv2d_apply(p, x, *, spec: ConvSpec | None = None, policy=None,
         raise TypeError(f"geometry given both in spec= and as kwargs "
                         f"{sorted(loose)}; put it all in the spec")
     return C.conv2d(x, p["w"].astype(x.dtype), spec, policy, mode=mode)
+
+
+def init_conv2d_transpose(key, c_in: int, c_out: int, k, dtype,
+                          groups: int = 1, L=None):
+    """Transposed-conv kernel ``(C_in, C_out/g, kh, kw)`` (the mirror
+    conv's OIHW weight with in/out roles swapped); k is an int or
+    (kh, kw).  fan-in init over the taps feeding one output pixel."""
+    kh, kw = (k, k) if isinstance(k, int) else k
+    assert c_in % groups == 0 and c_out % groups == 0
+    fan_in = (c_in // groups) * kh * kw
+    w = jax.random.normal(
+        key, _maybe_stack((c_in, c_out // groups, kh, kw), L), jnp.float32)
+    return {"w": (w * fan_in ** -0.5).astype(dtype)}
+
+
+def conv2d_transpose_apply(p, x, *, spec: ConvTransposeSpec | None = None,
+                           policy=None, stride=None, padding=None,
+                           output_padding=None, dilation=None, groups=None):
+    """x (B, C_in, H, W) -> (B, C_out, H_out, W_out) transposed conv
+    through the selected engines (decoders / upsampling heads).
+
+    ``spec`` carries the full geometry; without it the loose kwargs build
+    one.  ``policy`` selects the engine per pass exactly as for
+    :func:`conv2d_apply` -- the transposed forward rides the input-grad
+    (tap-GEMM) machinery, its VJP the regular-conv engines.
+    """
+    loose = {k: v for k, v in (("stride", stride), ("padding", padding),
+                               ("output_padding", output_padding),
+                               ("dilation", dilation), ("groups", groups))
+             if v is not None}
+    if spec is None:
+        spec = ConvTransposeSpec.make(**loose)
+    elif loose:
+        raise TypeError(f"geometry given both in spec= and as kwargs "
+                        f"{sorted(loose)}; put it all in the spec")
+    return C.conv2d_transpose(x, p["w"].astype(x.dtype), spec,
+                              policy=policy)
 
 
 def init_conv1d(key, c_in: int, c_out: int, k: int, dtype, groups: int = 1,

@@ -16,7 +16,7 @@ Batch conventions (produced by repro.data and input_specs in launch):
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -157,6 +157,82 @@ def count_active_params(params, cfg: ArchConfig) -> int:
             total += tree.size
     walk2(params, ())
     return total
+
+
+# ---------------------------------------------------------------------------
+# Conv autoencoder: strided conv encoder + transposed-conv decoder
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AutoencoderConfig:
+    """A small conv -> conv_transpose autoencoder (the decoder is the
+    transposed-conv workload of ISSUE 5: every upsampling layer goes
+    through ``conv2d_transpose``, never a hand-rolled zero-insertion).
+
+    Duck-compatible with the ``ArchConfig`` fields ``make_train_step``
+    reads (``name`` / ``conv_policy`` / ``conv_mode``), so the autoencoder
+    trains through the exact same jitted step as the LM families."""
+
+    name: str = "conv_autoencoder"
+    c_in: int = 3
+    widths: tuple[int, ...] = (16, 32)    # encoder channel widths, stride 2
+    k: int = 3
+    param_dtype: str = "float32"
+    conv_policy: str = "auto"
+    conv_mode: Optional[str] = None
+
+    @property
+    def dtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def conv_engine_policy(self) -> str:
+        if self.conv_mode is not None:
+            return self.conv_mode
+        return self.conv_policy
+
+
+def init_autoencoder(key, cfg: AutoencoderConfig):
+    """Params: per-stage encoder convs (stride 2) and the mirror decoder
+    transposed convs (stride 2, output_padding 1 -> exact 2x upsampling
+    for even planes)."""
+    chans = (cfg.c_in, *cfg.widths)
+    ks = jax.random.split(key, 2 * len(cfg.widths))
+    enc = [L.init_conv2d(ks[i], chans[i], chans[i + 1], cfg.k, cfg.dtype)
+           for i in range(len(cfg.widths))]
+    dec = [L.init_conv2d_transpose(ks[len(cfg.widths) + i], chans[i + 1],
+                                   chans[i], cfg.k, cfg.dtype)
+           for i in reversed(range(len(cfg.widths)))]
+    return {"enc": enc, "dec": dec}
+
+
+def autoencoder_apply(params, x, cfg: AutoencoderConfig, policy=None):
+    """x (B, C, H, W) -> reconstruction (B, C, H, W); H, W must be
+    divisible by 2**len(widths).  ``policy`` defaults to the config's
+    engine policy -- every conv pass (encoder and decoder) dispatches
+    through the per-pass engines."""
+    policy = policy if policy is not None else cfg.conv_engine_policy
+    pad = cfg.k // 2
+    h = x
+    for p in params["enc"]:
+        h = jax.nn.relu(L.conv2d_apply(p, h, stride=2, padding=pad,
+                                       policy=policy))
+    for i, p in enumerate(params["dec"]):
+        h = L.conv2d_transpose_apply(p, h, stride=2, padding=pad,
+                                     output_padding=1, policy=policy)
+        if i < len(params["dec"]) - 1:
+            h = jax.nn.relu(h)
+    return h
+
+
+def autoencoder_loss(params, batch, cfg: AutoencoderConfig):
+    """Reconstruction MSE over ``batch["image"]`` -- the ``loss=`` plugin
+    for ``make_train_step``."""
+    x = batch["image"]
+    x_hat = autoencoder_apply(params, x, cfg)
+    mse = jnp.mean(jnp.square(x_hat.astype(jnp.float32)
+                              - x.astype(jnp.float32)))
+    return mse, {"mse": mse, "loss": mse}
 
 
 def build_model(cfg: ArchConfig) -> Model:

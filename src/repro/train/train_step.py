@@ -33,7 +33,8 @@ def make_train_step(cfg: ArchConfig, opt_cfg: adamw.AdamWConfig,
                     accum_steps: int = 1,
                     compress_grads: bool = False,
                     conv_policy=None,
-                    conv_mode: str | None = None) -> Callable:
+                    conv_mode: str | None = None,
+                    loss: Callable | None = None) -> Callable:
     """compress_grads: int8-quantize gradients with error feedback before
     the optimizer -- models the numerics of a compressed cross-pod gradient
     all-reduce (the EF residual rides in opt_state['ef']).
@@ -45,7 +46,15 @@ def make_train_step(cfg: ArchConfig, opt_cfg: adamw.AdamWConfig,
     per-pass engines via the conv2d custom_vjp, so one training step can
     mix engines across forward / input-grad / weight-grad.
 
-    conv_mode: DEPRECATED uniform spelling of the same override."""
+    conv_mode: DEPRECATED uniform spelling of the same override.
+
+    loss: ``(params, batch, cfg) -> (loss, metrics)`` plugin replacing the
+    default LM loss -- e.g. ``repro.models.model.autoencoder_loss`` with an
+    ``AutoencoderConfig`` (any frozen dataclass carrying ``name`` /
+    ``conv_policy`` / ``conv_mode`` works as ``cfg`` then); the optimizer,
+    schedules, accumulation and gradient compression apply unchanged."""
+    if loss is None:
+        loss = loss_fn
     if conv_mode is not None:
         warnings.warn(
             "make_train_step(conv_mode=...) is deprecated; pass "
@@ -65,8 +74,8 @@ def make_train_step(cfg: ArchConfig, opt_cfg: adamw.AdamWConfig,
 
     def train_step(params, opt_state, batch, step):
         if accum_steps == 1:
-            (loss, metrics), grads = jax.value_and_grad(
-                loss_fn, has_aux=True)(params, batch, cfg)
+            (loss_val, metrics), grads = jax.value_and_grad(
+                loss, has_aux=True)(params, batch, cfg)
         else:
             # Microbatch accumulation: batch dims split on the leading axis.
             def split(x):
@@ -77,16 +86,16 @@ def make_train_step(cfg: ArchConfig, opt_cfg: adamw.AdamWConfig,
             def acc_fn(carry, mb):
                 g_acc, l_acc = carry
                 (l, m), g = jax.value_and_grad(
-                    loss_fn, has_aux=True)(params, mb, cfg)
+                    loss, has_aux=True)(params, mb, cfg)
                 g_acc = jax.tree.map(jnp.add, g_acc, g)
                 return (g_acc, l_acc + l), m
 
             zero_g = jax.tree.map(
                 lambda p: jnp.zeros(p.shape, jnp.float32), params)
-            (grads, loss), ms = jax.lax.scan(
+            (grads, loss_val), ms = jax.lax.scan(
                 acc_fn, (zero_g, jnp.zeros((), jnp.float32)), micro)
             grads = jax.tree.map(lambda g: g / accum_steps, grads)
-            loss = loss / accum_steps
+            loss_val = loss_val / accum_steps
             metrics = jax.tree.map(lambda x: x.mean(), ms)
 
         if compress_grads:

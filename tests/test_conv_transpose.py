@@ -1,0 +1,400 @@
+"""First-class transposed convolution (``ConvTransposeSpec`` +
+``conv2d_transpose``): tap-native lhs dilation through the engines.
+
+PR 5's tentpole invariants:
+  * the transposed forward role-swaps onto the engines' input-grad
+    machinery over the MIRROR regular conv (``transpose_dims``) -- on
+    ``pallas`` that is ONE fused ``tap_gemm_phased`` launch over the
+    ``s_h*s_w`` phase grid, zero insertion skipped at plan time;
+  * engines WITHOUT the ``native_transpose`` capability get the physical
+    zero-insertion materialization lowering
+    (``conv2d_transpose_materialized``), which doubles as the executable
+    oracle every implicit path is tested against;
+  * the VJP lowers to the already-tested regular-conv engines: dX is the
+    mirror strided conv, dW the mirror weight grad with roles swapped;
+  * ``"auto"`` keeps plannable transposed specs on ``pallas`` (asserted
+    via the ``*_T`` dispatch events).
+"""
+
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (ConvTransposeSpec, conv2d_transpose,
+                        conv2d_transpose_materialized, conv_policy,
+                        conv_transpose_output_shape, dispatch_events,
+                        policy_report, reset_dispatch_events,
+                        transpose_dims, transpose_tap_counts)
+from repro.core.conv import ENGINES
+from repro.kernels import tap_gemm as tg
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def _data(x_shape, w_shape, seed=0):
+    r = np.random.RandomState(seed)
+    x = jnp.asarray(r.randn(*x_shape), jnp.float32)
+    w = jnp.asarray(r.randn(*w_shape) * 0.5, jnp.float32)
+    return x, w
+
+
+def _lax_transpose_anchor(x, w, spec: ConvTransposeSpec):
+    """XLA's native transposed conv: lhs_dilation on conv_general_dilated
+    (defined for every geometry we accept -- the anchor where XLA supports
+    it; the materialization oracle covers the rest)."""
+    g = spec.groups
+    cin, cog, kh, kw = w.shape
+    keff_h, keff_w = spec.effective_kernel(kh, kw)
+    (ph_lo, ph_hi), (pw_lo, pw_hi) = spec.padding
+    wt = w[..., ::-1, ::-1].reshape(g, cin // g, cog, kh, kw)
+    wt = wt.transpose(0, 2, 1, 3, 4).reshape(g * cog, cin // g, kh, kw)
+    return jax.lax.conv_general_dilated(
+        x, wt, (1, 1),
+        [(keff_h - 1 - ph_lo, keff_h - 1 - ph_hi + spec.op_h),
+         (keff_w - 1 - pw_lo, keff_w - 1 - pw_hi + spec.op_w)],
+        lhs_dilation=spec.stride, rhs_dilation=spec.dilation,
+        dimension_numbers=("NCHW", "OIHW", "NCHW"), feature_group_count=g)
+
+
+# ---------------------------------------------------------------------------
+# Spec validation and shape inference
+# ---------------------------------------------------------------------------
+
+def test_spec_validation():
+    with pytest.raises(ValueError):
+        ConvTransposeSpec.make(stride=2, output_padding=2)   # op >= s
+    with pytest.raises(ValueError):
+        ConvTransposeSpec.make(stride=1, output_padding=1)
+    with pytest.raises(ValueError):
+        ConvTransposeSpec.make(stride=0)
+    with pytest.raises(ValueError):
+        ConvTransposeSpec(layout="NHCW")
+    s = ConvTransposeSpec.make(stride=(2, 3), padding=(1, 2),
+                               output_padding=(1, 2), dilation=2)
+    assert (s.s_h, s.s_w, s.op_h, s.op_w, s.d_h, s.d_w) == (2, 3, 1, 2, 2, 2)
+    assert ConvTransposeSpec.coerce(None) == ConvTransposeSpec()
+    assert ConvTransposeSpec.coerce({"stride": 2, "output_padding": 1}) == \
+        ConvTransposeSpec.make(stride=2, output_padding=1)
+
+
+def test_output_shape_formula():
+    # The PyTorch ConvTranspose2d formula, checked against the real output.
+    spec = ConvTransposeSpec.make(stride=(2, 3), padding=(1, 0),
+                                  output_padding=(1, 2), dilation=(2, 1))
+    x, w = _data((2, 4, 7, 5), (4, 6, 3, 3))
+    want = conv_transpose_output_shape(x.shape, w.shape, spec)
+    y = conv2d_transpose(x, w, spec, "lax")
+    assert y.shape == want
+    h, wd = y.shape[2:]
+    assert h == (7 - 1) * 2 + (3 - 1) * 2 + 1 - 2 * 1 + 1
+    assert wd == (5 - 1) * 3 + 3 - 0 + 2
+
+
+def test_mirror_dims_roundtrip():
+    """transpose_dims builds the mirror conv whose output IS the transposed
+    input, with output_padding landing on the tiling remainder R."""
+    spec = ConvTransposeSpec.make(stride=(2, 3), padding=1,
+                                  output_padding=(1, 2))
+    d = transpose_dims((2, 6, 8, 5), (6, 4, 3, 3), spec)
+    assert (d.H_o, d.W_o) == (8, 5)
+    assert (d.R_h, d.R_w) == (1, 2)
+    assert (d.N, d.C) == (6, 4)
+
+
+# ---------------------------------------------------------------------------
+# Forward + VJP equivalence vs the materialization oracle and vs lax
+# ---------------------------------------------------------------------------
+
+GRID = [
+    # (x_shape, w_shape, spec): stride-2 decoder, asym stride, dilated
+    # kernel, grouped, output_padding variants, stride 1, fat padding.
+    ((2, 8, 8, 8), (8, 4, 3, 3),
+     ConvTransposeSpec.make(stride=2, padding=1, output_padding=1)),
+    ((1, 4, 7, 5), (4, 6, 3, 3),
+     ConvTransposeSpec.make(stride=(2, 3), padding=1,
+                            output_padding=(1, 2))),
+    ((2, 4, 6, 6), (4, 4, 3, 3),
+     ConvTransposeSpec.make(stride=2, padding=2, output_padding=1,
+                            dilation=2)),
+    ((2, 4, 6, 6), (4, 2, 2, 2),
+     ConvTransposeSpec.make(stride=2, groups=2)),
+    ((1, 3, 9, 9), (3, 5, 3, 3), ConvTransposeSpec.make(stride=1,
+                                                        padding=1)),
+    ((1, 2, 6, 6), (2, 3, 5, 3),
+     ConvTransposeSpec.make(stride=(3, 2), padding=(2, 1),
+                            output_padding=(2, 0), dilation=(1, 2))),
+]
+
+POLICIES = ("pallas", "bp_phase", "bp_im2col", "traditional", "lax", "auto",
+            "fwd=pallas,dgrad=bp_phase,wgrad=bp_im2col")
+
+
+@pytest.mark.parametrize(
+    "x_shape,w_shape,spec", GRID,
+    ids=lambda v: str(v) if isinstance(v, tuple) else
+    f"s{v.s_h}x{v.s_w}_d{v.d_h}x{v.d_w}_op{v.op_h}{v.op_w}_g{v.groups}")
+def test_forward_and_grads_match_oracle(x_shape, w_shape, spec):
+    """Every engine (and the auto / mixed policies) reproduces the
+    zero-insertion materialization oracle, forward and VJP, and the oracle
+    itself is anchored on XLA's native lhs-dilated conv."""
+    x, w = _data(x_shape, w_shape)
+    want = conv2d_transpose_materialized(x, w, spec, "lax")
+    np.testing.assert_allclose(want, _lax_transpose_anchor(x, w, spec),
+                               rtol=1e-4, atol=1e-4)
+
+    def oracle_loss(a, b):
+        return jnp.sum(jnp.sin(conv2d_transpose_materialized(a, b, spec,
+                                                             "lax")))
+    ox, ow = jax.grad(oracle_loss, argnums=(0, 1))(x, w)
+    for pol in POLICIES:
+        y = conv2d_transpose(x, w, spec, pol)
+        assert y.shape == want.shape
+        np.testing.assert_allclose(y, want, rtol=5e-4, atol=5e-4,
+                                   err_msg=f"fwd {pol}")
+        gx, gw = jax.grad(
+            lambda a, b: jnp.sum(jnp.sin(conv2d_transpose(a, b, spec, pol))),
+            argnums=(0, 1))(x, w)
+        np.testing.assert_allclose(gx, ox, rtol=5e-4, atol=5e-4,
+                                   err_msg=f"dX {pol}")
+        np.testing.assert_allclose(gw, ow, rtol=5e-3, atol=5e-3,
+                                   err_msg=f"dW {pol}")
+
+
+def test_kwargs_surface_and_jit_vmap():
+    x, w = _data((2, 4, 6, 6), (4, 3, 3, 3))
+    spec = ConvTransposeSpec.make(stride=2, padding=1, output_padding=1)
+    want = conv2d_transpose(x, w, spec, "bp_phase")
+    got = conv2d_transpose(x, w, stride=2, padding=1, output_padding=1,
+                           policy="bp_phase")
+    np.testing.assert_array_equal(want, got)
+    jitted = jax.jit(lambda a, b: conv2d_transpose(a, b, spec, "pallas"))
+    np.testing.assert_allclose(jitted(x, w), want, rtol=5e-4, atol=5e-4)
+    batched = jax.vmap(lambda a: conv2d_transpose(a[None], w, spec,
+                                                  "bp_phase")[0])(x)
+    np.testing.assert_allclose(batched, want, rtol=5e-4, atol=5e-4)
+    with pytest.raises(TypeError):
+        conv2d_transpose(x, w, spec, stride=2)         # geometry twice
+    with pytest.raises(TypeError):
+        conv2d_transpose(x, w, spec, "pallas", policy="lax")
+
+
+def test_nhwc_layout():
+    spec = ConvTransposeSpec.make(stride=2, padding=1, output_padding=1,
+                                  layout="NHWC")
+    x, w = _data((2, 4, 6, 6), (4, 3, 3, 3))
+    want = conv2d_transpose(x, w, spec.with_layout("NCHW"), "bp_phase")
+    xt = x.transpose(0, 2, 3, 1)
+    got = conv2d_transpose(xt, w, spec, "bp_phase")
+    np.testing.assert_allclose(got.transpose(0, 3, 1, 2), want,
+                               rtol=1e-5, atol=1e-5)
+    # Shape inference follows the spec's layout.
+    assert got.shape == conv_transpose_output_shape(xt.shape, w.shape, spec)
+    assert want.shape == conv_transpose_output_shape(
+        x.shape, w.shape, spec.with_layout("NCHW"))
+
+
+# ---------------------------------------------------------------------------
+# Dispatch: auto routing, capability flag, fused launch, introspection
+# ---------------------------------------------------------------------------
+
+def test_native_transpose_flags():
+    assert ENGINES["pallas"].native_transpose
+    assert ENGINES["bp_phase"].native_transpose
+    assert ENGINES["bp_im2col"].native_transpose
+    assert ENGINES["lax"].native_transpose
+    assert not ENGINES["traditional"].native_transpose
+
+
+def test_auto_keeps_transposed_specs_on_pallas():
+    """Dispatch-events acceptance: ``"auto"`` routes a plannable transposed
+    spec to the pallas engine for every pass, under the ``*_T`` keys."""
+    for x_shape, w_shape, spec in (
+            ((2, 8, 8, 8), (8, 4, 3, 3),
+             ConvTransposeSpec.make(stride=2, padding=1, output_padding=1)),
+            ((1, 4, 7, 5), (4, 6, 3, 3),
+             ConvTransposeSpec.make(stride=(2, 3), padding=1)),
+            ((2, 4, 6, 6), (4, 4, 3, 3),
+             ConvTransposeSpec.make(stride=2, padding=2, output_padding=1,
+                                    dilation=2))):
+        x, w = _data(x_shape, w_shape)
+        reset_dispatch_events()
+        jax.grad(lambda a, b: conv2d_transpose(a, b, spec, "auto").sum(),
+                 argnums=(0, 1))(x, w)
+        ev = dispatch_events()
+        for pass_name in ("forward_T", "input_grad_T", "weight_grad_T"):
+            assert ev.get(f"{pass_name}:pallas", 0) >= 1, (spec, ev)
+            assert not any(k.startswith(f"{pass_name}:")
+                           and k != f"{pass_name}:pallas" for k in ev), (
+                spec, ev)
+
+
+def test_auto_stride1_transposed_stays_dense():
+    """Stride-1 transposed conv has no zero-space: auto resolves bp_phase."""
+    spec = ConvTransposeSpec.make(stride=1, padding=1)
+    x, w = _data((1, 3, 8, 8), (3, 4, 3, 3))
+    reset_dispatch_events()
+    conv2d_transpose(x, w, spec, "auto")
+    assert dispatch_events().get("forward_T:bp_phase", 0) >= 1
+
+
+def test_transposed_forward_is_one_fused_launch(monkeypatch):
+    """The pallas transposed forward is ONE tap_gemm_phased dispatch for
+    all s_h*s_w output phases."""
+    spec = ConvTransposeSpec.make(stride=(2, 3), padding=1,
+                                  output_padding=(1, 2))
+    x, w = _data((1, 4, 6, 6), (4, 5, 3, 3))
+    calls = []
+    real = tg.pl.pallas_call
+
+    def counting(*args, **kwargs):
+        calls.append(1)
+        return real(*args, **kwargs)
+
+    monkeypatch.setattr(tg.pl, "pallas_call", counting)
+    y = conv2d_transpose(x, w, spec, "pallas")
+    assert len(calls) == 1, f"{len(calls)} dispatches"
+    np.testing.assert_allclose(
+        y, conv2d_transpose_materialized(x, w, spec, "lax"),
+        rtol=5e-4, atol=5e-4)
+
+
+def test_conv_policy_context_covers_transpose():
+    spec = ConvTransposeSpec.make(stride=2, padding=1, output_padding=1)
+    x, w = _data((1, 4, 6, 6), (4, 3, 3, 3))
+    reset_dispatch_events()
+    with conv_policy("traditional"):
+        y = conv2d_transpose(x, w, spec, "pallas")   # context beats per-call
+    assert dispatch_events().get("forward_T:traditional", 0) == 1
+    np.testing.assert_allclose(
+        y, conv2d_transpose_materialized(x, w, spec, "lax"),
+        rtol=5e-4, atol=5e-4)
+
+
+def test_tap_counts_skip_ratio():
+    """Zero-insertion accounting: the fused plan runs the compact taps,
+    the materialization would run s_h*s_w*K_eff_h*K_eff_w -- skip_ratio is
+    1 - 1/(s_h*s_w) dense, and folds in kernel-dilation skipping."""
+    d = transpose_dims((2, 8, 8, 8), (8, 4, 3, 3),
+                       ConvTransposeSpec.make(stride=2, padding=1,
+                                              output_padding=1))
+    taps = transpose_tap_counts(d)
+    assert taps == {"real": 9, "zero_inserted": 36, "skip_ratio": 0.75}
+    d2 = transpose_dims((2, 4, 6, 6), (4, 4, 3, 3),
+                        ConvTransposeSpec.make(stride=2, padding=2,
+                                               output_padding=1, dilation=2))
+    taps2 = transpose_tap_counts(d2)
+    assert taps2["real"] == 9 and taps2["zero_inserted"] == 100
+    assert taps2["real"] < taps2["zero_inserted"]
+    assert taps2["skip_ratio"] == 0.91    # 1 - 9/(4*25)
+
+
+def test_policy_report_transposed():
+    spec = ConvTransposeSpec.make(stride=2, padding=1, output_padding=1)
+    rep = policy_report((2, 8, 16, 16), (8, 4, 3, 3), spec, "auto")
+    assert rep["transpose"] and rep["pallas_path"]
+    assert set(rep["passes"]) == {"forward", "input_grad", "weight_grad"}
+    assert all(v["engine"] == "pallas" for v in rep["passes"].values())
+    assert rep["taps"]["real"] < rep["taps"]["zero_inserted"]
+    assert rep["plan"]["pallas_path"]
+    # Regular specs keep reporting (and now carry the transpose flag).
+    rep2 = policy_report((2, 8, 16, 16), (4, 8, 3, 3))
+    assert rep2["transpose"] is False
+
+
+def test_oversized_padding_falls_back_recorded():
+    """padding > K_eff-1 is outside the paper constraints: implicit engines
+    fall back to lax -- recorded, never silent, and still exact."""
+    spec = ConvTransposeSpec.make(stride=2, padding=(3, 3))   # K=3, p=3
+    x, w = _data((1, 3, 8, 8), (3, 4, 3, 3))
+    reset_dispatch_events()
+    y = conv2d_transpose(x, w, spec, "auto")
+    ev = dispatch_events()
+    assert ev.get("forward_T:lax", 0) >= 1, ev
+    np.testing.assert_allclose(
+        y, conv2d_transpose_materialized(x, w, spec, "lax"),
+        rtol=5e-4, atol=5e-4)
+
+
+# ---------------------------------------------------------------------------
+# Grep-lint: no hand-rolled zero-insertion upsampling outside core/
+# ---------------------------------------------------------------------------
+
+def test_zero_insert_lint_repo_clean():
+    from scripts import check_no_zero_insert as lint
+    assert lint.main([str(ROOT / "scripts" / "check_no_zero_insert.py"),
+                      str(ROOT)]) == 0
+
+
+def test_zero_insert_lint_catches_strided_scatter(tmp_path):
+    from scripts import check_no_zero_insert as lint
+    bad = tmp_path / "src" / "repro" / "models" / "bad.py"
+    bad.parent.mkdir(parents=True)
+    bad.write_text(
+        "up = jnp.zeros((B, C, 2*H, 2*W))\n"
+        "up = up.at[..., ::2, ::2].set(x)\n")
+    assert lint.scan(tmp_path), "strided-scatter upsampling not caught"
+    assert lint.main(["check", str(tmp_path)]) == 1
+    # core/ keeps the privilege: same idiom under core/ passes.
+    ok = tmp_path / "src" / "repro" / "core" / "impl.py"
+    ok.parent.mkdir(parents=True)
+    bad.unlink()
+    ok.write_text("out = out.at[..., ::s, ::s].set(x)\n")
+    assert lint.main(["check", str(tmp_path)]) == 0
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis sweep: (s_h != s_w) x dilation x output_padding
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+@settings(max_examples=30, deadline=None)
+@given(
+    hi=st.integers(3, 9), wi=st.integers(3, 9),
+    k_h=st.integers(1, 3), k_w=st.integers(1, 3),
+    s_h=st.integers(1, 3), s_w=st.integers(1, 3),
+    d_h=st.integers(1, 2), d_w=st.integers(1, 2),
+    op_h=st.integers(0, 2), op_w=st.integers(0, 2),
+    seed=st.integers(0, 2**16),
+)
+def test_property_transposed_grads(hi, wi, k_h, k_w, s_h, s_w, d_h, d_w,
+                                   op_h, op_w, seed):
+    """Property: over (s_h != s_w) x (d_h, d_w) x output_padding, the
+    end-to-end pallas/auto transposed conv equals the zero-insertion
+    materialization oracle, forward and VJP (fp32 tolerance).
+
+    The oracle (not XLA's transposed autodiff) is the ground truth: XLA's
+    conv-transpose gradient aborts on some strided+dilated remainder
+    geometries, the same reason the PR-4 sweep anchors on the oracle."""
+    op_h, op_w = min(op_h, s_h - 1), min(op_w, s_w - 1)
+    keff_h, keff_w = (k_h - 1) * d_h + 1, (k_w - 1) * d_w + 1
+    p_h, p_w = min(1, keff_h - 1), min(1, keff_w - 1)
+    spec = ConvTransposeSpec.make(stride=(s_h, s_w), dilation=(d_h, d_w),
+                                  padding=(p_h, p_w),
+                                  output_padding=(op_h, op_w))
+    h_out, w_out = spec.output_shape(hi, wi, k_h, k_w)
+    if h_out < 1 or w_out < 1:
+        return
+    r = np.random.RandomState(seed)
+    x = jnp.asarray(r.randn(2, 2, hi, wi), jnp.float32)
+    w = jnp.asarray(r.randn(2, 3, k_h, k_w) * 0.5, jnp.float32)
+
+    def loss(pol):
+        return lambda a, b: jnp.sum(jnp.sin(conv2d_transpose(a, b, spec,
+                                                             pol)))
+    want = conv2d_transpose_materialized(x, w, spec, "lax")
+    ox, ow = jax.grad(
+        lambda a, b: jnp.sum(jnp.sin(conv2d_transpose_materialized(
+            a, b, spec, "lax"))), argnums=(0, 1))(x, w)
+    for pol in ("pallas", "auto"):
+        np.testing.assert_allclose(conv2d_transpose(x, w, spec, pol), want,
+                                   rtol=5e-3, atol=5e-3,
+                                   err_msg=f"fwd {pol} {spec}")
+        gx, gw = jax.grad(loss(pol), argnums=(0, 1))(x, w)
+        np.testing.assert_allclose(gx, ox, rtol=5e-3, atol=5e-3,
+                                   err_msg=f"dX {pol} {spec}")
+        np.testing.assert_allclose(gw, ow, rtol=5e-3, atol=5e-3,
+                                   err_msg=f"dW {pol} {spec}")
