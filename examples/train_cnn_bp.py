@@ -93,7 +93,20 @@ def main():
     ap.add_argument("--batch", type=int, default=32)
     ap.add_argument("--lr", type=float, default=0.05)
     ap.add_argument("--acc-floor", type=float, default=0.9)
+    ap.add_argument("--autotune", default=None,
+                    choices=["off", "measure", "cached"],
+                    help="measured autotuning of the Pallas tile plans "
+                         "(repro.config.autotune)")
+    ap.add_argument("--plan-cache-dir", default=None,
+                    help="persistent plan-cache directory "
+                         "(repro.config.plan_cache_dir)")
     args = ap.parse_args()
+    if args.autotune is not None or args.plan_cache_dir is not None:
+        from repro.core.config import config
+        config.update(**{k: v for k, v in
+                         (("autotune", args.autotune),
+                          ("plan_cache_dir", args.plan_cache_dir))
+                         if v is not None})
     if args.mode is not None:
         warnings.warn("--mode is deprecated; use --policy",
                       DeprecationWarning)

@@ -1,11 +1,19 @@
 #!/usr/bin/env python
-"""Grep-lint: no internal call site may pass a raw conv ``mode=`` string.
+"""Grep-lint: deprecated spellings may not sneak back into the tree.
 
-The structured surface is ``conv2d(x, w, ConvSpec, policy=...)``;
-``mode="bp_phase"``-style strings are the deprecated shim and live ONLY in
-``src/repro/core/conv.py`` (the shim itself) and the tests that cover it.
-This script fails CI when a raw mode string (or a ``mode=cfg.conv_mode``
-plumbing) sneaks back into src/, examples/, benchmarks/ or scripts/.
+Two rule families, each with its own allow-list:
+
+* raw conv ``mode=`` strings -- the structured surface is
+  ``conv2d(x, w, ConvSpec, policy=...)``; ``mode="bp_phase"``-style
+  strings are the deprecated shim and live ONLY in
+  ``src/repro/core/conv.py`` (the shim itself) and the tests covering it.
+* raw ``os.environ`` reads of the ``REPRO_*`` / ``BPIM2COL_*`` knobs --
+  the knobs live on ``repro.config`` (``src/repro/core/config.py`` is the
+  single module allowed to touch their env vars).  Writing them into a
+  subprocess environment dict is fine; READING them anywhere else is not.
+
+This script fails CI on any hit in src/, examples/, benchmarks/ or
+scripts/.
 
     python scripts/check_no_raw_mode.py [root]
 """
@@ -17,36 +25,48 @@ import re
 import sys
 
 ENGINE = r"(?:lax|traditional|bp_im2col|bp_phase|pallas|auto)"
-PATTERNS = [
-    # mode="bp_phase" / mode='pallas' -- the deprecated stringly kwarg
-    re.compile(rf"""\bmode\s*=\s*["']{ENGINE}["']"""),
-    # mode=cfg.conv_mode / mode=args.conv_mode -- deprecated plumbing
-    re.compile(r"\bmode\s*=\s*(?:cfg|args|self)\.conv_mode\b"),
+
+_P = pathlib.PurePosixPath
+
+#: (description, [compiled patterns], {allowed files})
+RULES = [
+    ("raw conv mode= strings outside the compat shim "
+     "(use ConvSpec/EnginePolicy: policy=...)",
+     [  # mode="bp_phase" / mode='pallas' -- the deprecated stringly kwarg
+        re.compile(rf"""\bmode\s*=\s*["']{ENGINE}["']"""),
+        # mode=cfg.conv_mode / mode=args.conv_mode -- deprecated plumbing
+        re.compile(r"\bmode\s*=\s*(?:cfg|args|self)\.conv_mode\b")],
+     {_P("src/repro/core/conv.py"),
+      _P("scripts/check_no_raw_mode.py")}),
+    ("raw os.environ reads of REPRO_*/BPIM2COL_* knobs outside "
+     "repro/core/config.py (use repro.config)",
+     [  # os.environ.get("REPRO_X") / os.environ["BPIM2COL_X"], any alias
+        # of the os module (import os as _os).
+        re.compile(r"""environ\s*\.\s*get\s*\(\s*["'](?:REPRO_|BPIM2COL_)"""),
+        re.compile(r"""environ\s*\[\s*["'](?:REPRO_|BPIM2COL_)""")],
+     {_P("src/repro/core/config.py"),
+      _P("scripts/check_no_raw_mode.py")}),
 ]
 
 SCAN_DIRS = ("src", "examples", "benchmarks", "scripts")
 
-# The shim itself (and this linter) are the only places the deprecated
-# spelling may appear.
-ALLOWED = {pathlib.PurePosixPath("src/repro/core/conv.py"),
-           pathlib.PurePosixPath("scripts/check_no_raw_mode.py")}
 
-
-def scan(root: pathlib.Path) -> list[str]:
-    hits = []
+def scan(root: pathlib.Path) -> dict[str, list[str]]:
+    hits: dict[str, list[str]] = {}
     for d in SCAN_DIRS:
         base = root / d
         if not base.is_dir():
             continue
         for path in sorted(base.rglob("*.py")):
-            rel = pathlib.PurePosixPath(path.relative_to(root).as_posix())
-            if rel in ALLOWED:
-                continue
-            for lineno, line in enumerate(
-                    path.read_text(encoding="utf-8").splitlines(), 1):
-                for pat in PATTERNS:
-                    if pat.search(line):
-                        hits.append(f"{rel}:{lineno}: {line.strip()}")
+            rel = _P(path.relative_to(root).as_posix())
+            lines = path.read_text(encoding="utf-8").splitlines()
+            for desc, patterns, allowed in RULES:
+                if rel in allowed:
+                    continue
+                for lineno, line in enumerate(lines, 1):
+                    if any(p.search(line) for p in patterns):
+                        hits.setdefault(desc, []).append(
+                            f"{rel}:{lineno}: {line.strip()}")
     return hits
 
 
@@ -55,13 +75,13 @@ def main(argv: list[str]) -> int:
         pathlib.Path(__file__).resolve().parent.parent
     hits = scan(root)
     if hits:
-        print("raw conv mode= strings outside the compat shim "
-              "(use ConvSpec/EnginePolicy: policy=...):", file=sys.stderr)
-        for h in hits:
-            print("  " + h, file=sys.stderr)
+        for desc, lines in hits.items():
+            print(f"{desc}:", file=sys.stderr)
+            for h in lines:
+                print("  " + h, file=sys.stderr)
         return 1
-    print(f"ok: no raw conv mode= strings outside the shim "
-          f"({', '.join(SCAN_DIRS)})")
+    print(f"ok: no raw conv mode= strings or raw REPRO_*/BPIM2COL_* env "
+          f"reads outside their shims ({', '.join(SCAN_DIRS)})")
     return 0
 
 

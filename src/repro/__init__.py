@@ -1,0 +1,15 @@
+"""repro: BP-im2col implicit conv backprop on systolic arrays (jax/Pallas).
+
+``repro.config`` is the global runtime configuration singleton
+(:mod:`repro.core.config`).  It is resolved lazily so that importing
+``repro`` submodules stays side-effect free -- in particular,
+``repro.launch.dryrun`` must be able to set ``XLA_FLAGS`` before anything
+imports jax.
+"""
+
+
+def __getattr__(name):
+    if name == "config":
+        from repro.core.config import config
+        return config
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -21,43 +21,50 @@ Responsibilities:
 
 Tap tables and tile choices depend only on the static ``ConvDims`` and the
 budget, so they are memoized (``functools.lru_cache``) with the budget as an
-explicit cache-key argument: mutating ``VMEM_BUDGET_BYTES`` (as tests and
-benchmarks do) re-plans instead of returning stale cached plans.  Repeated
-layer shapes -- every step of a training run retraces the same convs --
-skip the search entirely.  ``tile_plan_cache_info()`` exposes hit counts;
+explicit cache-key argument.  The budget itself lives on the global config
+(``repro.config.vmem_budget_bytes``): ``config.update(...)`` both changes
+the default budget every planner resolves AND invalidates these lru caches,
+so there is no way to be served a stale plan.  Repeated layer shapes --
+every step of a training run retraces the same convs -- skip the search
+entirely.  ``tile_plan_cache_info()`` exposes hit counts;
 ``clear_tile_plan_cache()`` resets; ``plan_events()`` counts planned-vs-
 fallback outcomes (one event per unique shape/budget) for benchmarks & CI.
 
-``interpret`` defaults to True because this container is CPU-only; on real
-TPU hardware set ``BPIM2COL_INTERPRET=0`` in the environment (or assign
-``repro.kernels.ops.INTERPRET = False`` before the first trace) to compile
-the kernels with Mosaic instead -- no code edit required.
+When ``repro.config.autotune`` is not ``"off"``, the public planners
+(:func:`forward_plan` / :func:`weight_grad_plan` / :func:`input_grad_plan`)
+route through ``repro.kernels.autotune``: the analytic search keeps its
+role (first-fit feasibility + fallback/event accounting), but the tile
+actually dispatched may be a MEASURED winner -- the top-k analytic
+candidates timed on device, persisted in an on-disk plan cache.  The
+``"auto"`` engine resolver and every ``conv2d`` dispatch consult tuned
+plans exactly as they consult analytic ones, because they all go through
+these three entry points.
+
+``repro.config.interpret`` defaults to True because this container is
+CPU-only; on real TPU hardware set ``BPIM2COL_INTERPRET=0`` in the
+environment (or ``repro.config.update(interpret=False)``) to compile the
+kernels with Mosaic instead -- no code edit required.  The pre-config
+module globals ``INTERPRET`` / ``VMEM_BUDGET_BYTES`` remain readable and
+assignable as deprecated aliases of the config fields.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
-import os
+import sys
+import types
+import warnings
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.config import config
 from repro.core.im2col_ref import ConvDims, rot180, zero_insert, zero_pad
 from repro.core import phase_decomp
 from repro.kernels import tap_gemm as tg
 from repro.kernels.tap_gemm import _cdiv, _taps_halo
 
-
-def _interpret_default() -> bool:
-    """``BPIM2COL_INTERPRET`` env override: unset/1/true -> interpret mode
-    (CPU), 0/false/no/off -> compile with Mosaic (real TPU)."""
-    return os.environ.get("BPIM2COL_INTERPRET", "1").strip().lower() \
-        not in ("0", "false", "no", "off")
-
-
-INTERPRET = _interpret_default()
-VMEM_BUDGET_BYTES = 14 * 1024 * 1024
 _ELEM_BYTES = 4            # budget in f32 elements (worst case)
 
 #: planned-vs-fallback outcomes, one event per unique (ConvDims, budget)
@@ -194,13 +201,46 @@ def _search_tiles(oh, ow, cin_pad, cout_pad, cost_fn, budget):
     return (*last, False)
 
 
+def _search_tiles_topk(oh, ow, cin_pad, cout_pad, cost_fn, budget, k):
+    """Up to ``k`` distinct FITTING candidates in analytic search order (the
+    first element is exactly what :func:`_search_tiles` returns when it
+    fits): the autotuner's shortlist.  The analytic order ranks by bytes
+    moved, so the shortlist is "the analytically best plan plus the next
+    finer tilings" -- the region where the analytic model most often
+    mispredicts real hardware."""
+    out, seen = [], set()
+    for cin_t, cout_t in _channel_candidates(cin_pad, cout_pad):
+        for th, tw in _spatial_candidates(oh, ow):
+            cand = (th, tw, cin_t, cout_t)
+            if cand in seen:
+                continue
+            seen.add(cand)
+            bytes_needed = cost_fn(th, tw, cin_t, cout_t)
+            if bytes_needed <= budget:
+                out.append((th, tw, _cdiv(oh, th), _cdiv(ow, tw),
+                            cin_t, cout_t, bytes_needed))
+                if len(out) >= k:
+                    return out
+    return out
+
+
 # ---------------------------------------------------------------------------
 # Memoized tile plans (static per ConvDims x budget)
 # ---------------------------------------------------------------------------
 
 @dataclasses.dataclass(frozen=True)
 class TilePlan:
-    """One Pallas dispatch: channel + spatial tiling, tap table, footprint."""
+    """One Pallas dispatch: channel + spatial tiling, tap table, footprint.
+
+    The trailing autotune fields are metadata only (they do not change the
+    dispatch): ``autotuned`` marks a MEASURED winner from
+    ``repro.kernels.autotune`` rather than the analytic first-fit,
+    ``measured_us`` its best-of-reps wall-clock, ``candidates_timed`` how
+    many analytic candidates were raced, and ``cache`` whether the winner
+    came from the persistent plan cache (``"hit"``), was tuned fresh
+    (``"miss"``) or replaced an invalid persisted entry (``"stale"``).
+    Analytic plans leave them at their defaults.
+    """
     fits: bool
     cin_pad: int
     cin_tile: int
@@ -214,10 +254,20 @@ class TilePlan:
     halo_h: int
     halo_w: int
     bytes_needed: int
+    autotuned: bool = False
+    measured_us: float = -1.0
+    candidates_timed: int = 0
+    cache: str = ""
 
     @property
     def spatial_splits(self) -> int:
         return self.n_th * self.n_tw
+
+    @property
+    def tile_key(self) -> tuple[int, int, int, int]:
+        """The persisted identity of one candidate: what the autotuner
+        stores and what :func:`plan_from_tile` revalidates."""
+        return (self.oh_tile, self.ow_tile, self.cin_tile, self.cout_tile)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -253,13 +303,12 @@ def _forward_taps(d: ConvDims) -> tuple[tuple[int, int, int], ...]:
                  for kw in range(0, d.K_w, d.D_w))
 
 
-def forward_plan(d: ConvDims, budget: int | None = None) -> TilePlan:
-    return _forward_plan(_canonical(d),
-                         VMEM_BUDGET_BYTES if budget is None else budget)
+def _budget_or_default(budget: int | None) -> int:
+    return config.vmem_budget_bytes if budget is None else budget
 
 
-@functools.lru_cache(maxsize=4096)
-def _forward_plan(d: ConvDims, budget: int) -> TilePlan:
+def _forward_geom(d: ConvDims):
+    """(cin_pad, cout_pad, taps, halo_h, halo_w, cost_fn) of a forward."""
     cin_p, _ = _channel_tile(d.C)
     cout_p, _ = _channel_tile(d.N)
     taps = _forward_taps(d)
@@ -271,20 +320,10 @@ def _forward_plan(d: ConvDims, budget: int) -> TilePlan:
                               + len(taps) * cit * cot
                               + 2 * th * tw * cot)
 
-    th, tw, n_th, n_tw, cit, cot, bytes_needed, fits = _search_tiles(
-        d.H_o, d.W_o, cin_p, cout_p, cost, budget)
-    _count_event("forward_pallas" if fits else "forward_fallback")
-    return TilePlan(fits, cin_p, cit, cout_p, cot, taps, th, tw, n_th, n_tw,
-                    halo_h, halo_w, bytes_needed)
+    return cin_p, cout_p, taps, halo_h, halo_w, cost
 
 
-def weight_grad_plan(d: ConvDims, budget: int | None = None) -> TilePlan:
-    return _weight_grad_plan(_canonical(d),
-                             VMEM_BUDGET_BYTES if budget is None else budget)
-
-
-@functools.lru_cache(maxsize=4096)
-def _weight_grad_plan(d: ConvDims, budget: int) -> TilePlan:
+def _weight_grad_geom(d: ConvDims):
     cin_p, _ = _channel_tile(d.C)
     cout_p, _ = _channel_tile(d.N)
     taps = _forward_taps(d)
@@ -296,24 +335,14 @@ def _weight_grad_plan(d: ConvDims, budget: int) -> TilePlan:
                               + th * tw * cot
                               + 2 * len(taps) * cit * cot)
 
-    th, tw, n_th, n_tw, cit, cot, bytes_needed, fits = _search_tiles(
-        d.H_o, d.W_o, cin_p, cout_p, cost, budget)
-    _count_event("weight_grad_pallas" if fits else "weight_grad_fallback")
-    return TilePlan(fits, cin_p, cit, cout_p, cot, taps, th, tw, n_th, n_tw,
-                    halo_h, halo_w, bytes_needed)
-
-
-def input_grad_plan(d: ConvDims,
-                    budget: int | None = None) -> PhasePlan | None:
-    return _input_grad_plan(_canonical(d),
-                            VMEM_BUDGET_BYTES if budget is None else budget)
+    return cin_p, cout_p, taps, halo_h, halo_w, cost
 
 
 @functools.lru_cache(maxsize=4096)
-def _input_grad_plan(d: ConvDims, budget: int) -> PhasePlan | None:
-    """Single fused dispatch plan for all s_h*s_w output stride phases, or
-    None only when even the minimal tiling exceeds the budget (the op then
-    falls back to the jnp phase decomposition).
+def _input_grad_geom(d: ConvDims):
+    """The fused-phase geometry shared by every input-grad tile candidate:
+    (cin_pad, cout_pad, n_qh, n_qw, g_lo_h, g_lo_w, t_max, specs, taps_all,
+    halo_h, halo_w).
 
     Row and column tap tables are independent: each axis runs its own
     ``phase_geometry`` under its own stride, and a kernel dilation drops
@@ -373,21 +402,162 @@ def _input_grad_plan(d: ConvDims, budget: int) -> PhasePlan | None:
             t_max = max(t_max, len(th_) * len(tw_))
             halo_h = max(halo_h, sh + th_[-1][0])
             halo_w = max(halo_w, sw + tw_[-1][0])
+    return (cin_p, cout_p, n_qh, n_qw, g_lo_h, g_lo_w, t_max,
+            tuple(specs), tuple(taps_all), halo_h, halo_w)
 
+
+def _input_grad_cost(t_max: int, halo_h: int, halo_w: int):
     def cost(th, tw, cit, cot):
         return _ELEM_BYTES * ((th + halo_h) * (tw + halo_w) * cit
                               + t_max * cit * cot
                               + 2 * th * tw * cot)
+    return cost
 
+
+def _phase_plan_of(d: ConvDims, geom, tile: TilePlan) -> PhasePlan:
+    _, _, n_qh, n_qw, g_lo_h, g_lo_w, t_max, specs, taps_all, _, _ = geom
+    return PhasePlan(n_qh, n_qw, g_lo_h, g_lo_w, t_max, specs, taps_all,
+                     tile)
+
+
+def _autotuned(role: str, d: ConvDims, budget: int, analytic):
+    """Route one planner resolution through the measured autotuner when
+    ``config.autotune`` enables it.  The analytic result keeps ownership of
+    feasibility (fits=False / None never gets tuned -- there is nothing to
+    race) and of the planned-vs-fallback event accounting."""
+    if config.autotune == "off":
+        return analytic
+    if analytic is None or not getattr(analytic, "fits", True):
+        return analytic
+    from repro.kernels import autotune
+    return autotune.tuned_plan(role, d, budget, analytic)
+
+
+def forward_plan(d: ConvDims, budget: int | None = None) -> TilePlan:
+    d, budget = _canonical(d), _budget_or_default(budget)
+    return _autotuned("forward", d, budget, _forward_plan(d, budget))
+
+
+@functools.lru_cache(maxsize=4096)
+def _forward_plan(d: ConvDims, budget: int) -> TilePlan:
+    cin_p, cout_p, taps, halo_h, halo_w, cost = _forward_geom(d)
     th, tw, n_th, n_tw, cit, cot, bytes_needed, fits = _search_tiles(
-        n_qh, n_qw, cin_p, cout_p, cost, budget)
+        d.H_o, d.W_o, cin_p, cout_p, cost, budget)
+    _count_event("forward_pallas" if fits else "forward_fallback")
+    return TilePlan(fits, cin_p, cit, cout_p, cot, taps, th, tw, n_th, n_tw,
+                    halo_h, halo_w, bytes_needed)
+
+
+def weight_grad_plan(d: ConvDims, budget: int | None = None) -> TilePlan:
+    d, budget = _canonical(d), _budget_or_default(budget)
+    return _autotuned("weight_grad", d, budget, _weight_grad_plan(d, budget))
+
+
+@functools.lru_cache(maxsize=4096)
+def _weight_grad_plan(d: ConvDims, budget: int) -> TilePlan:
+    cin_p, cout_p, taps, halo_h, halo_w, cost = _weight_grad_geom(d)
+    th, tw, n_th, n_tw, cit, cot, bytes_needed, fits = _search_tiles(
+        d.H_o, d.W_o, cin_p, cout_p, cost, budget)
+    _count_event("weight_grad_pallas" if fits else "weight_grad_fallback")
+    return TilePlan(fits, cin_p, cit, cout_p, cot, taps, th, tw, n_th, n_tw,
+                    halo_h, halo_w, bytes_needed)
+
+
+def input_grad_plan(d: ConvDims,
+                    budget: int | None = None) -> PhasePlan | None:
+    d, budget = _canonical(d), _budget_or_default(budget)
+    return _autotuned("input_grad", d, budget, _input_grad_plan(d, budget))
+
+
+@functools.lru_cache(maxsize=4096)
+def _input_grad_plan(d: ConvDims, budget: int) -> PhasePlan | None:
+    """Single fused dispatch plan for all s_h*s_w output stride phases, or
+    None only when even the minimal tiling exceeds the budget (the op then
+    falls back to the jnp phase decomposition)."""
+    geom = _input_grad_geom(d)
+    cin_p, cout_p, n_qh, n_qw, _, _, t_max, _, _, halo_h, halo_w = geom
+    th, tw, n_th, n_tw, cit, cot, bytes_needed, fits = _search_tiles(
+        n_qh, n_qw, cin_p, cout_p,
+        _input_grad_cost(t_max, halo_h, halo_w), budget)
     _count_event("input_grad_pallas" if fits else "input_grad_fallback")
     if not fits:
         return None
     tile = TilePlan(True, cin_p, cit, cout_p, cot, (), th, tw, n_th, n_tw,
                     halo_h, halo_w, bytes_needed)
-    return PhasePlan(n_qh, n_qw, g_lo_h, g_lo_w, t_max,
-                     tuple(specs), tuple(taps_all), tile)
+    return _phase_plan_of(d, geom, tile)
+
+
+#: the three tap-GEMM pass roles the planners (and the autotuner) speak.
+PLAN_ROLES = ("forward", "weight_grad", "input_grad")
+
+
+def plan_candidates(role: str, d: ConvDims, budget: int | None = None,
+                    k: int | None = None):
+    """The autotuner's shortlist: up to ``k`` analytically FITTING plans in
+    search order (first element == the analytic winner).  ``input_grad``
+    candidates are full :class:`PhasePlan` objects sharing one geometry.
+    Pure and unmemoized; records no plan events."""
+    d, budget = _canonical(d), _budget_or_default(budget)
+    k = config.autotune_top_k if k is None else k
+    if role == "forward":
+        cin_p, cout_p, taps, halo_h, halo_w, cost = _forward_geom(d)
+        oh, ow = d.H_o, d.W_o
+    elif role == "weight_grad":
+        cin_p, cout_p, taps, halo_h, halo_w, cost = _weight_grad_geom(d)
+        oh, ow = d.H_o, d.W_o
+    elif role == "input_grad":
+        geom = _input_grad_geom(d)
+        cin_p, cout_p, oh, ow, _, _, t_max, _, _, halo_h, halo_w = geom
+        taps, cost = (), _input_grad_cost(t_max, halo_h, halo_w)
+    else:
+        raise ValueError(f"unknown plan role {role!r}; roles: {PLAN_ROLES}")
+    tiles = _search_tiles_topk(oh, ow, cin_p, cout_p, cost, budget, k)
+    plans = [TilePlan(True, cin_p, cit, cout_p, cot, taps, th, tw,
+                      n_th, n_tw, halo_h, halo_w, bytes_needed)
+             for th, tw, n_th, n_tw, cit, cot, bytes_needed in tiles]
+    if role == "input_grad":
+        return [_phase_plan_of(d, geom, t) for t in plans]
+    return plans
+
+
+def plan_from_tile(role: str, d: ConvDims, budget: int | None,
+                   tile) -> TilePlan | PhasePlan | None:
+    """Rebuild a dispatchable plan from a PERSISTED candidate identity
+    ``(oh_tile, ow_tile, cin_tile, cout_tile)``, revalidating it against
+    the current geometry and budget.  Returns None when the tile is no
+    longer valid (plan-cache entry gone stale: code changed the geometry,
+    the budget shrank, or the entry is garbage) -- the caller re-tunes."""
+    d, budget = _canonical(d), _budget_or_default(budget)
+    try:
+        th, tw, cit, cot = (int(v) for v in tile)
+    except (TypeError, ValueError):
+        return None
+    if role == "forward":
+        cin_p, cout_p, taps, halo_h, halo_w, cost = _forward_geom(d)
+        oh, ow = d.H_o, d.W_o
+    elif role == "weight_grad":
+        cin_p, cout_p, taps, halo_h, halo_w, cost = _weight_grad_geom(d)
+        oh, ow = d.H_o, d.W_o
+    elif role == "input_grad":
+        geom = _input_grad_geom(d)
+        cin_p, cout_p, oh, ow, _, _, t_max, _, _, halo_h, halo_w = geom
+        taps, cost = (), _input_grad_cost(t_max, halo_h, halo_w)
+    else:
+        raise ValueError(f"unknown plan role {role!r}; roles: {PLAN_ROLES}")
+    if not (1 <= th <= oh and 1 <= tw <= ow):
+        return None
+    if not (1 <= cit <= cin_p and 1 <= cot <= cout_p
+            and cin_p % cit == 0 and cout_p % cot == 0):
+        return None
+    bytes_needed = cost(th, tw, cit, cot)
+    if bytes_needed > budget:
+        return None
+    plan = TilePlan(True, cin_p, cit, cout_p, cot, taps, th, tw,
+                    _cdiv(oh, th), _cdiv(ow, tw), halo_h, halo_w,
+                    bytes_needed)
+    if role == "input_grad":
+        return _phase_plan_of(d, geom, plan)
+    return plan
 
 
 _PLANNERS = {"forward_plan": _forward_plan,
@@ -414,12 +584,18 @@ def plan_report(d: ConvDims, budget: int | None = None) -> dict[str, object]:
     (``K_h * K_w``, the zero-dilated extent).  They differ exactly when the
     layer is dilated."""
     def _tile(p: TilePlan) -> dict[str, object]:
-        return {"fits": p.fits, "spatial_splits": p.spatial_splits,
-                "spatial_tile": [p.oh_tile, p.ow_tile],
-                "chan_tile": [p.cin_tile, p.cout_tile],
-                "halo": [p.halo_h, p.halo_w],
-                "taps": len(p.taps),
-                "bytes_needed": p.bytes_needed}
+        t = {"fits": p.fits, "spatial_splits": p.spatial_splits,
+             "spatial_tile": [p.oh_tile, p.ow_tile],
+             "chan_tile": [p.cin_tile, p.cout_tile],
+             "halo": [p.halo_h, p.halo_w],
+             "taps": len(p.taps),
+             "bytes_needed": p.bytes_needed}
+        if p.cache:        # the plan went through the autotuner
+            t["autotune"] = {"autotuned": p.autotuned,
+                             "measured_us": p.measured_us,
+                             "candidates_timed": p.candidates_timed,
+                             "cache": p.cache}
+        return t
     f = forward_plan(d, budget)
     wg = weight_grad_plan(d, budget)
     ig = input_grad_plan(d, budget)
@@ -442,13 +618,16 @@ def plan_report(d: ConvDims, budget: int | None = None) -> dict[str, object]:
 # Forward convolution (implicit im2col, phase-split tap GEMM)
 # ---------------------------------------------------------------------------
 
-def conv2d_forward(x: jax.Array, w: jax.Array, d: ConvDims) -> jax.Array:
+def conv2d_forward(x: jax.Array, w: jax.Array, d: ConvDims,
+                   plan: TilePlan | None = None) -> jax.Array:
     """Forward conv through the tap-GEMM kernel.  ``w`` is the COMPACT
     kernel (``k_taps_h x k_taps_w`` spatial extent); when ``d`` carries a
     dilation the tap table skips the zero positions instead of the kernel
-    being materialized to ``K_h x K_w``."""
+    being materialized to ``K_h x K_w``.  ``plan`` overrides the planner
+    (the autotuner races explicit candidate plans through here)."""
     assert w.shape[-2:] == (d.k_taps_h, d.k_taps_w), (w.shape, d)
-    plan = forward_plan(d)
+    if plan is None:
+        plan = forward_plan(d)
     if not plan.fits:
         return jax.lax.conv_general_dilated(
             x, w, (d.s_h, d.s_w), [(d.P_h, d.p_h_hi), (d.P_w, d.p_w_hi)],
@@ -463,7 +642,7 @@ def conv2d_forward(x: jax.Array, w: jax.Array, d: ConvDims) -> jax.Array:
     y = tg.tap_gemm(src, wt, plan.taps, d.H_o, d.W_o,
                     cin_tile=plan.cin_tile, cout_tile=plan.cout_tile,
                     oh_tile=plan.oh_tile, ow_tile=plan.ow_tile,
-                    out_dtype=x.dtype, interpret=INTERPRET)
+                    out_dtype=x.dtype, interpret=config.interpret)
     return _from_nhwc(y[..., :d.N])
 
 
@@ -471,12 +650,14 @@ def conv2d_forward(x: jax.Array, w: jax.Array, d: ConvDims) -> jax.Array:
 # Input gradient (transposed mode): ALL stride phases in one fused launch
 # ---------------------------------------------------------------------------
 
-def conv2d_input_grad(dy: jax.Array, w: jax.Array, d: ConvDims) -> jax.Array:
+def conv2d_input_grad(dy: jax.Array, w: jax.Array, d: ConvDims,
+                      plan: PhasePlan | None = None) -> jax.Array:
     """Input grad through ONE fused tap-GEMM launch.  ``w`` is the COMPACT
     kernel; the per-phase tap tables index straight into ``rot180(w)``
-    (dilation's zero taps were dropped at plan time)."""
+    (dilation's zero taps were dropped at plan time).  ``plan`` overrides
+    the planner (autotune candidate racing)."""
     assert w.shape[-2:] == (d.k_taps_h, d.k_taps_w), (w.shape, d)
-    pp = input_grad_plan(d)
+    pp = input_grad_plan(d) if plan is None else plan
     if pp is None:
         w_eff = zero_insert(w, (d.D_h, d.D_w)) if d.has_dilation else w
         return phase_decomp.input_grad_phase(dy, w_eff, d)
@@ -503,7 +684,8 @@ def conv2d_input_grad(dy: jax.Array, w: jax.Array, d: ConvDims) -> jax.Array:
         src, wk_stack, pp.phase_taps, pp.n_qh, pp.n_qw,
         cin_tile=tile.cin_tile, cout_tile=tile.cout_tile,
         oh_tile=tile.oh_tile, ow_tile=tile.ow_tile,
-        out_dtype=dy.dtype, interpret=INTERPRET)      # (sh*sw, B, qh, qw, C)
+        out_dtype=dy.dtype,
+        interpret=config.interpret)                   # (sh*sw, B, qh, qw, C)
     di = _phase_unsplit(out[..., :d.C], (d.s_h, d.s_w), d.H_i, d.W_i)
     return _from_nhwc(di)
 
@@ -512,12 +694,15 @@ def conv2d_input_grad(dy: jax.Array, w: jax.Array, d: ConvDims) -> jax.Array:
 # Weight gradient (dilated mode): strided-view tap GEMM, batch-accumulated
 # ---------------------------------------------------------------------------
 
-def conv2d_weight_grad(x: jax.Array, dy: jax.Array, d: ConvDims) -> jax.Array:
+def conv2d_weight_grad(x: jax.Array, dy: jax.Array, d: ConvDims,
+                       plan: TilePlan | None = None) -> jax.Array:
     """Weight grad through the tap-wgrad kernel: one accumulated GEMM per
     REAL kernel tap, returned at the compact ``k_taps_h x k_taps_w``
     extent (a dilated kernel's zero taps get no gradient computed at
-    all -- they would be discarded anyway)."""
-    plan = weight_grad_plan(d)
+    all -- they would be discarded anyway).  ``plan`` overrides the
+    planner (autotune candidate racing)."""
+    if plan is None:
+        plan = weight_grad_plan(d)
     if not plan.fits:
         dw = phase_decomp.weight_grad_phase(x, dy, d)   # effective extent
         return dw[..., ::d.D_h, ::d.D_w] if d.has_dilation else dw
@@ -528,6 +713,41 @@ def conv2d_weight_grad(x: jax.Array, dy: jax.Array, d: ConvDims) -> jax.Array:
     dw = tg.tap_wgrad(src, dyn, plan.taps, d.H_o, d.W_o,
                       cin_tile=plan.cin_tile, cout_tile=plan.cout_tile,
                       oh_tile=plan.oh_tile, ow_tile=plan.ow_tile,
-                      interpret=INTERPRET)
+                      interpret=config.interpret)
     dw = dw[:, :d.C, :d.N].reshape(d.k_taps_h, d.k_taps_w, d.C, d.N)
     return dw.transpose(3, 2, 0, 1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Deprecated module-global aliases (INTERPRET / VMEM_BUDGET_BYTES)
+# ---------------------------------------------------------------------------
+# The knobs moved to ``repro.config``.  Reads keep working silently (too
+# many innocuous introspection sites); ASSIGNMENT -- the old footgun of
+# mutating a module global -- forwards to ``config.update`` (which does the
+# plan-cache invalidation the global never did) and warns.
+
+_LEGACY_GLOBALS = {"INTERPRET": "interpret",
+                   "VMEM_BUDGET_BYTES": "vmem_budget_bytes"}
+
+
+class _OpsModule(types.ModuleType):
+    def __getattr__(self, name):
+        field = _LEGACY_GLOBALS.get(name)
+        if field is None:
+            raise AttributeError(
+                f"module {self.__name__!r} has no attribute {name!r}")
+        return getattr(config, field)
+
+    def __setattr__(self, name, value):
+        field = _LEGACY_GLOBALS.get(name)
+        if field is None:
+            super().__setattr__(name, value)
+            return
+        warnings.warn(
+            f"setting repro.kernels.ops.{name} is deprecated; use "
+            f"repro.config.update({field}=...)",
+            DeprecationWarning, stacklevel=2)
+        config.update(**{field: value})
+
+
+sys.modules[__name__].__class__ = _OpsModule

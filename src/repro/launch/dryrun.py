@@ -28,6 +28,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import all_arch_ids, get_config
+from repro.core.config import config
 from repro.configs.base import ArchConfig, SHAPES, ShapeCfg, applicable_shapes
 from repro.dist import sharding as SH
 from repro.launch.mesh import make_production_mesh
@@ -269,8 +270,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         "mesh": mesh_name,
         "policy": policy,
         "window_skip": window_skip,
-        "remat": os.environ.get("REPRO_REMAT", cfg.remat),
-        "ssd_chunk": os.environ.get("REPRO_SSD_CHUNK", "128"),
+        "remat": cfg.remat if config.remat is None else config.remat,
+        "ssd_chunk": str(config.ssd_chunk),
         "n_devices": n_dev,
         "kind": shape.kind,
         "cache_bytes": cache_bytes,

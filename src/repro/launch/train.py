@@ -71,11 +71,30 @@ def main(argv=None):
                     choices=["lax", "traditional", "bp_im2col", "bp_phase",
                              "pallas"],
                     help="DEPRECATED: uniform spelling of --conv-policy")
+    ap.add_argument("--autotune", default=None,
+                    choices=["off", "measure", "cached"],
+                    help="measured autotuning of the Pallas tile plans "
+                         "(repro.config.autotune): 'measure' times the "
+                         "top-k candidates and persists the winners, "
+                         "'cached' reuses persisted winners without timing")
+    ap.add_argument("--plan-cache-dir", default=None,
+                    help="persistent plan-cache directory "
+                         "(repro.config.plan_cache_dir; default: next to "
+                         "jax's compilation cache)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+
+    if args.autotune is not None or args.plan_cache_dir is not None:
+        from repro.core.config import config
+        updates = {}
+        if args.autotune is not None:
+            updates["autotune"] = args.autotune
+        if args.plan_cache_dir is not None:
+            updates["plan_cache_dir"] = args.plan_cache_dir
+        config.update(**updates)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     if cfg.family == "ssm":

@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
+from repro.core.config import config
 from repro.models import layers as L
 
 
@@ -38,11 +39,15 @@ def _split_heads(x, n, dh):
     return x.reshape(*x.shape[:-1], n, dh)
 
 
-import os as _os
-
-BLOCKWISE_KV_THRESHOLD = int(_os.environ.get("REPRO_BLOCKWISE_THRESHOLD",
-                                             "1024"))
 BLOCK_K = 512
+
+
+def __getattr__(name):
+    # Deprecated alias: the KV-length crossover now lives at
+    # repro.config.blockwise_kv_threshold (read per call).
+    if name == "BLOCKWISE_KV_THRESHOLD":
+        return config.blockwise_kv_threshold
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 def _sdpa_dense(q, k, v, *, causal, window, q_offset, kv_len, scale):
@@ -173,7 +178,7 @@ def _sdpa(q, k, v, *, causal: bool, window: int | None, q_offset: int = 0,
             and q.shape[1] == k.shape[1] and q.shape[1] >= 2 * window
             and kv_len is None and q_offset == 0):
         return _sdpa_local_window(q, k, v, window=window, scale=scale)
-    if k.shape[1] > BLOCKWISE_KV_THRESHOLD and q.shape[1] > 1:
+    if k.shape[1] > config.blockwise_kv_threshold and q.shape[1] > 1:
         return _sdpa_blockwise(q, k, v, causal=causal, window=window,
                                q_offset=q_offset, kv_len=kv_len, scale=scale)
     return _sdpa_dense(q, k, v, causal=causal, window=window,

@@ -12,18 +12,22 @@ BP-im2col engine inside this architecture.
 
 from __future__ import annotations
 
-import os
-
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from repro.core import depthwise_causal_conv1d
+from repro.core.config import config
 from repro.models import layers as L
 
-# SSD chunk length: intra-chunk (quadratic) work scales ~Q per token, the
-# inter-chunk state recurrence ~1/Q -- a perf-iteration lever (§Perf).
-CHUNK = int(os.environ.get("REPRO_SSD_CHUNK", "128"))
+
+def __getattr__(name):
+    # Deprecated alias for the pre-config module constant; the SSD chunk
+    # length now lives at repro.config.ssd_chunk (read per call, so tests
+    # can override it without reload tricks).
+    if name == "CHUNK":
+        return config.ssd_chunk
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 def d_inner(cfg: ArchConfig) -> int:
@@ -61,7 +65,9 @@ def _ssd_chunked(xh, dt, a_log, B, C):
     """
     b, l, h, p = xh.shape
     s = B.shape[-1]
-    q = min(CHUNK, l)
+    # SSD chunk length: intra-chunk (quadratic) work scales ~Q per token,
+    # the inter-chunk state recurrence ~1/Q -- a perf-iteration lever.
+    q = min(config.ssd_chunk, l)
     assert l % q == 0, f"seq {l} not divisible by chunk {q}"
     nc = l // q
 

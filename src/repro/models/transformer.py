@@ -15,22 +15,26 @@ Decode variants scan the same stacks with per-layer cache slices as scan xs.
 
 from __future__ import annotations
 
-import os
-
 import jax
 
-# Roofline runs set REPRO_SCAN_UNROLL=9999: XLA's cost model does not
-# multiply while-loop bodies by trip count, so the dry-run unrolls the layer
-# scan to make cost_analysis()['flops'] reflect all layers.
-SCAN_UNROLL = int(os.environ.get("REPRO_SCAN_UNROLL", "1"))
-
 from repro.configs.base import ArchConfig
+from repro.core.config import config
 from repro.dist.constraints import constrain_batch
 from repro.models import attention as A
 from repro.models import layers as L
 from repro.models import mamba2 as M
 from repro.models import moe as MOE
 from repro.models import recurrent as R
+
+
+def __getattr__(name):
+    # Deprecated alias: the layer-scan unroll factor now lives at
+    # repro.config.scan_unroll (roofline dry-runs set 9999 so XLA's
+    # cost_analysis sees every layer -- while-loop bodies are not
+    # multiplied by trip count).
+    if name == "SCAN_UNROLL":
+        return config.scan_unroll
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 # ---------------------------------------------------------------------------
@@ -98,10 +102,10 @@ def ssm_block(p, x, cfg: ArchConfig):
 
 
 def _maybe_remat(fn, cfg: ArchConfig):
-    # REPRO_REMAT overrides the config policy (perf-iteration lever, §Perf):
-    # "none" drops per-block rematerialization (recompute flops saved,
-    # activation memory paid), "block" forces it.
-    policy = os.environ.get("REPRO_REMAT", cfg.remat)
+    # config.remat overrides the per-arch policy (perf-iteration lever,
+    # §Perf): "none" drops per-block rematerialization (recompute flops
+    # saved, activation memory paid), "block" forces it.
+    policy = cfg.remat if config.remat is None else config.remat
     return jax.checkpoint(fn) if policy == "block" else fn
 
 
@@ -113,7 +117,7 @@ def _scan_stack(body, stacked_params, x):
 
     nl = jax.tree.leaves(stacked_params)[0].shape[0]
     x, auxs = jax.lax.scan(step, x, stacked_params,
-                           unroll=min(SCAN_UNROLL, nl))
+                           unroll=min(config.scan_unroll, nl))
     aux = {k: v.sum() for k, v in auxs.items()} if auxs else {}
     return x, aux
 
@@ -226,7 +230,7 @@ def _scan_decode(body, stacked_params, cache, x):
 
     nl = jax.tree.leaves(stacked_params)[0].shape[0]
     return jax.lax.scan(step, x, (stacked_params, cache),
-                        unroll=min(SCAN_UNROLL, nl))
+                        unroll=min(config.scan_unroll, nl))
 
 
 def decode_stacks(params, cache, x, pos, cfg: ArchConfig):

@@ -1,17 +1,18 @@
 """Spatial-tiling boundary tests.
 
-Shrinking ``VMEM_BUDGET_BYTES`` must force progressively finer spatial
-splits (1x, 2x, 4x) while all three Pallas conv ops keep agreeing with the
-lax reference -- there is no all-or-nothing fallback anymore.  Large shapes
-that used to exceed the budget must now plan onto the Pallas path, and the
-fused input gradient must issue exactly ONE pallas_call per conv regardless
-of stride.
+Shrinking ``config.vmem_budget_bytes`` must force progressively finer
+spatial splits (1x, 2x, 4x) while all three Pallas conv ops keep agreeing
+with the lax reference -- there is no all-or-nothing fallback anymore.
+Large shapes that used to exceed the budget must now plan onto the Pallas
+path, and the fused input gradient must issue exactly ONE pallas_call per
+conv regardless of stride.
 """
 
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core.config import config
 from repro.core.im2col_ref import ConvDims, conv2d_lax, conv_grads_lax
 from repro.kernels import ops
 from repro.kernels import tap_gemm as tg
@@ -29,9 +30,9 @@ def _data(d: ConvDims, seed=0):
 
 @pytest.fixture(autouse=True)
 def _restore_budget():
-    old = ops.VMEM_BUDGET_BYTES
+    old = config.vmem_budget_bytes
     yield
-    ops.VMEM_BUDGET_BYTES = old
+    config.update(vmem_budget_bytes=old)
 
 
 def _budget_forcing_splits(d: ConvDims, target: int) -> int:
@@ -59,7 +60,7 @@ def test_budget_forces_spatial_splits(target_splits):
     base_di = ops.conv2d_input_grad(dy, w, D)
     base_dw = ops.conv2d_weight_grad(x, dy, D)
 
-    ops.VMEM_BUDGET_BYTES = _budget_forcing_splits(D, target_splits)
+    config.update(vmem_budget_bytes=_budget_forcing_splits(D, target_splits))
     fp = ops.forward_plan(D)
     assert fp.fits and fp.spatial_splits == target_splits
     assert ops.weight_grad_plan(D).fits
@@ -88,7 +89,7 @@ def test_spatially_split_plans_stay_correct_across_strides():
         x, w, dy = _data(d, seed=s)
         want_y = conv2d_lax(x, w, d)
         want_di, want_dw = conv_grads_lax(x, w, dy, d)
-        ops.VMEM_BUDGET_BYTES = _budget_forcing_splits(d, 4)
+        config.update(vmem_budget_bytes=_budget_forcing_splits(d, 4))
         assert ops.input_grad_plan(d) is not None
         np.testing.assert_allclose(ops.conv2d_forward(x, w, d), want_y,
                                    rtol=5e-4, atol=5e-4, err_msg=f"S={s}")
@@ -121,13 +122,31 @@ def test_large_shapes_take_pallas_path():
 
 
 def test_budget_is_part_of_the_plan_cache_key():
-    """Mutating VMEM_BUDGET_BYTES must re-plan, not serve stale plans."""
+    """Flipping config.vmem_budget_bytes must re-plan, not serve stale
+    plans -- the pre-config footgun of mutating ops.VMEM_BUDGET_BYTES and
+    hoping the lru key caught it is gone."""
     full = ops.forward_plan(D)
     assert full.spatial_splits == 1
-    ops.VMEM_BUDGET_BYTES = full.bytes_needed - 1
+    config.update(vmem_budget_bytes=full.bytes_needed - 1)
     assert ops.forward_plan(D).spatial_splits > 1
-    ops.VMEM_BUDGET_BYTES = full.bytes_needed
+    config.update(vmem_budget_bytes=full.bytes_needed)
     assert ops.forward_plan(D).spatial_splits == 1
+
+
+def test_budget_change_invalidates_plan_cache():
+    """config.update(vmem_budget_bytes=...) drops the memoized plans: the
+    planner lru re-MISSES after the flip instead of serving a stale hit."""
+    ops.forward_plan(D)
+    before = ops.tile_plan_cache_info()["forward_plan"]
+    ops.forward_plan(D)
+    after = ops.tile_plan_cache_info()["forward_plan"]
+    assert after.hits == before.hits + 1          # warm: memoized
+    config.update(vmem_budget_bytes=config.vmem_budget_bytes - 1)
+    cleared = ops.tile_plan_cache_info()["forward_plan"]
+    assert cleared.currsize == 0                  # invalidated, not stale
+    ops.forward_plan(D)
+    again = ops.tile_plan_cache_info()["forward_plan"]
+    assert again.misses >= 1 and again.hits == 0  # re-planned fresh
 
 
 @pytest.mark.parametrize("stride", [1, 2, 3])
