@@ -100,12 +100,18 @@ def main():
     ap.add_argument("--plan-cache-dir", default=None,
                     help="persistent plan-cache directory "
                          "(repro.config.plan_cache_dir)")
+    ap.add_argument("--fault-spec", default=None,
+                    help="arm the fault injector (repro.config.fault_spec), "
+                         "e.g. 'pallas.*:raise@step3' -- see "
+                         "examples/train_chaos.py for the full chaos drill")
     args = ap.parse_args()
-    if args.autotune is not None or args.plan_cache_dir is not None:
+    if args.autotune is not None or args.plan_cache_dir is not None \
+            or args.fault_spec is not None:
         from repro.core.config import config
         config.update(**{k: v for k, v in
                          (("autotune", args.autotune),
-                          ("plan_cache_dir", args.plan_cache_dir))
+                          ("plan_cache_dir", args.plan_cache_dir),
+                          ("fault_spec", args.fault_spec))
                          if v is not None})
     if args.mode is not None:
         warnings.warn("--mode is deprecated; use --policy",
@@ -121,6 +127,9 @@ def main():
     grad_fn = jax.jit(jax.value_and_grad(loss_fn))
     t0 = time.perf_counter()
     for step in range(args.steps):
+        if args.fault_spec:
+            from repro.ft import inject
+            inject.set_step(step)
         x, y = synthetic_task(rng, args.batch)
         loss, g = grad_fn(params, x, y)
         params = jax.tree.map(lambda p, gg: p - args.lr * gg, params, g)

@@ -1,1 +1,2 @@
-from repro.ckpt.checkpoint import save, restore, latest_steps
+from repro.ckpt.checkpoint import (latest_steps, reset_skipped_checkpoints,
+                                   restore, save, skipped_checkpoints, wait)

@@ -15,7 +15,17 @@ detect silent corruption.  ``keep`` rotates old checkpoints.
 
 Async save: ``save(..., blocking=False)`` snapshots to host in the caller
 thread (cheap device->host copy) and writes files on a background thread, so
-the train loop overlaps checkpoint I/O with compute.
+the train loop overlaps checkpoint I/O with compute.  A background write
+that FAILS is never silent: the exception is captured and re-raised from the
+next ``save()`` or from :func:`wait` (call ``wait()`` before reading
+``latest_steps`` at shutdown -- it joins the in-flight write).
+
+Restore is degradation-aware: a candidate checkpoint that cannot be loaded
+(truncated array file, manifest hash mismatch, torn write without COMMIT)
+is SKIPPED with the reason recorded (:func:`skipped_checkpoints`) and the
+next-newest committed step is tried, so one bad checkpoint costs ``keep``
+steps of progress, not the run.  Only when NO candidate is loadable -- or
+an explicitly requested ``step=`` is bad -- does restore raise.
 """
 
 from __future__ import annotations
@@ -23,12 +33,17 @@ from __future__ import annotations
 import hashlib
 import json
 import os
+import re
 import shutil
 import threading
 from typing import Any, Optional
 
 import jax
 import numpy as np
+
+from repro.ft.inject import fault_point
+
+_STEP_DIR = re.compile(r"step_(\d+)")
 
 
 def _leaf_paths(tree, prefix=()):
@@ -48,29 +63,103 @@ def _set_path(tree, path, val):
     tree[path[-1]] = val
 
 
+# ---------------------------------------------------------------------------
+# Async writer with exception capture
+# ---------------------------------------------------------------------------
+
+class _AsyncWriter:
+    """At most one background checkpoint write in flight; its exception
+    (if any) is held until the next :meth:`launch` or :meth:`wait`."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._thread: Optional[threading.Thread] = None
+        self._exc: Optional[BaseException] = None
+
+    def _join_locked(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _reraise_locked(self):
+        if self._exc is not None:
+            exc, self._exc = self._exc, None
+            raise exc
+
+    def launch(self, fn) -> None:
+        """Wait for the previous write (re-raising its failure), then run
+        ``fn`` on a fresh background thread."""
+        with self._lock:
+            self._join_locked()
+            self._reraise_locked()
+
+            def _run():
+                try:
+                    fn()
+                except BaseException as e:   # held, re-raised on next call
+                    self._exc = e
+
+            self._thread = threading.Thread(target=_run, daemon=True)
+            self._thread.start()
+
+    def wait(self) -> None:
+        """Join the in-flight write and re-raise its failure (if any)."""
+        with self._lock:
+            self._join_locked()
+            self._reraise_locked()
+
+
+_WRITER = _AsyncWriter()
+
+
+def wait() -> None:
+    """Block until any async ``save(..., blocking=False)`` has finished,
+    re-raising the background exception if the write failed.  Call before
+    reading ``latest_steps`` at shutdown / before a rollback-restore."""
+    _WRITER.wait()
+
+
+# ---------------------------------------------------------------------------
+# Save
+# ---------------------------------------------------------------------------
+
 def save(ckpt_dir: str, step: int, tree: Any, *, keep: int = 3,
          blocking: bool = True) -> str:
-    """Write a step-atomic checkpoint; returns its directory."""
+    """Write a step-atomic checkpoint; returns its directory.
+
+    Non-blocking saves hand the file I/O to a background thread; a failure
+    there is re-raised from the NEXT ``save()`` (or :func:`wait`), so a
+    dead disk cannot silently eat every checkpoint of a run.
+    """
+    _WRITER.wait()                    # surface any failed previous write
     leaves = [(".".join(path), np.asarray(leaf))
               for path, leaf in _leaf_paths(tree)]
 
     def _write():
+        fault_point("ckpt.write")
         d = os.path.join(ckpt_dir, f"step_{step:08d}")
         tmp = d + ".tmp"
-        os.makedirs(tmp, exist_ok=True)
-        manifest = {"step": step, "leaves": []}
-        for i, (name, arr) in enumerate(leaves):
-            fn = f"arr_{i:05d}.npy"
-            np.save(os.path.join(tmp, fn), arr)
-            manifest["leaves"].append({
-                "name": name, "file": fn, "shape": list(arr.shape),
-                "dtype": str(arr.dtype),
-                "sha256": hashlib.sha256(arr.tobytes()).hexdigest(),
-            })
-        with open(os.path.join(tmp, "manifest.json"), "w") as f:
-            json.dump(manifest, f)
-        with open(os.path.join(tmp, "COMMIT"), "w") as f:
-            f.write("ok")
+        try:
+            os.makedirs(tmp, exist_ok=True)
+            manifest = {"step": step, "leaves": []}
+            for i, (name, arr) in enumerate(leaves):
+                fn = f"arr_{i:05d}.npy"
+                np.save(os.path.join(tmp, fn), arr)
+                manifest["leaves"].append({
+                    "name": name, "file": fn, "shape": list(arr.shape),
+                    "dtype": str(arr.dtype),
+                    "sha256": hashlib.sha256(arr.tobytes()).hexdigest(),
+                })
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f)
+            with open(os.path.join(tmp, "COMMIT"), "w") as f:
+                f.write("ok")
+        except BaseException:
+            # Never leave a half-written tmp dir behind: the *.tmp suffix
+            # already excludes it from latest_steps, but a retry of the
+            # same step must start clean.
+            shutil.rmtree(tmp, ignore_errors=True)
+            raise
         if os.path.exists(d):
             shutil.rmtree(d)
         os.rename(tmp, d)
@@ -79,8 +168,7 @@ def save(ckpt_dir: str, step: int, tree: Any, *, keep: int = 3,
     if blocking:
         _write()
     else:
-        t = threading.Thread(target=_write, daemon=True)
-        t.start()
+        _WRITER.launch(_write)
     return os.path.join(ckpt_dir, f"step_{step:08d}")
 
 
@@ -91,36 +179,57 @@ def _rotate(ckpt_dir: str, keep: int):
                       ignore_errors=True)
 
 
+# ---------------------------------------------------------------------------
+# Discovery and skip accounting
+# ---------------------------------------------------------------------------
+
+#: restore/discovery decisions to skip a checkpoint, with reasons (bounded).
+_SKIPPED: list[dict] = []
+_MAX_SKIPPED = 64
+
+
+def _record_skip(what: str, reason: str) -> None:
+    if len(_SKIPPED) < _MAX_SKIPPED:
+        _SKIPPED.append({"checkpoint": what, "reason": reason})
+
+
+def skipped_checkpoints() -> list[dict]:
+    """Checkpoints that discovery or restore refused to use, and why
+    (torn write without COMMIT, truncated array, hash mismatch, ...)."""
+    return list(_SKIPPED)
+
+
+def reset_skipped_checkpoints() -> None:
+    _SKIPPED.clear()
+
+
 def latest_steps(ckpt_dir: str) -> list[int]:
+    """Committed checkpoint steps, ascending.  Torn writes (a ``step_*``
+    directory without COMMIT) are skipped and recorded; ``*.tmp`` staging
+    dirs and foreign names are ignored."""
     if not os.path.isdir(ckpt_dir):
         return []
     out = []
     for name in os.listdir(ckpt_dir):
-        d = os.path.join(ckpt_dir, name)
-        if name.startswith("step_") and \
-                os.path.exists(os.path.join(d, "COMMIT")):
-            out.append(int(name[5:]))
+        m = _STEP_DIR.fullmatch(name)
+        if not m:
+            continue
+        if not os.path.exists(os.path.join(ckpt_dir, name, "COMMIT")):
+            _record_skip(name, "no COMMIT marker (torn write)")
+            continue
+        out.append(int(m.group(1)))
     return sorted(out)
 
 
-def restore(ckpt_dir: str, step: Optional[int] = None, *,
-            shardings: Any = None, verify: bool = True):
-    """Restore the latest (or given) committed checkpoint.
+# ---------------------------------------------------------------------------
+# Restore
+# ---------------------------------------------------------------------------
 
-    shardings: optional pytree of NamedSharding matching the saved tree --
-    enables elastic resume onto a different mesh than the one that saved.
-    Returns (step, tree) or (None, None) when no checkpoint exists.
-    """
-    steps = latest_steps(ckpt_dir)
-    if not steps:
-        return None, None
-    step = step if step is not None else steps[-1]
+def _load_one(ckpt_dir: str, step: int, flat_shard: dict, verify: bool):
+    """Load one committed checkpoint or raise (OSError/ValueError/...)."""
     d = os.path.join(ckpt_dir, f"step_{step:08d}")
     with open(os.path.join(d, "manifest.json")) as f:
         manifest = json.load(f)
-    flat_shard = dict(
-        (".".join(p), s) for p, s in _leaf_paths(shardings)) \
-        if shardings is not None else {}
     tree: dict = {}
     for leaf in manifest["leaves"]:
         arr = np.load(os.path.join(d, leaf["file"]))
@@ -132,4 +241,45 @@ def restore(ckpt_dir: str, step: Optional[int] = None, *,
         if leaf["name"] in flat_shard:
             arr = jax.device_put(arr, flat_shard[leaf["name"]])
         _set_path(tree, tuple(leaf["name"].split(".")), arr)
-    return step, tree
+    return tree
+
+
+def restore(ckpt_dir: str, step: Optional[int] = None, *,
+            shardings: Any = None, verify: bool = True):
+    """Restore the newest LOADABLE committed checkpoint (or the given step).
+
+    shardings: optional pytree of NamedSharding matching the saved tree --
+    enables elastic resume onto a different mesh than the one that saved.
+    Returns (step, tree) or (None, None) when no checkpoint exists.
+
+    Without an explicit ``step=``, candidates are tried newest-first: a
+    checkpoint that fails to load (truncated ``.npy``, manifest hash
+    mismatch, unreadable manifest) is skipped with the reason recorded in
+    :func:`skipped_checkpoints` and the next-newest is tried.  Only when
+    every committed candidate fails does restore raise, with each failure
+    (including any corruption) named in the message.  An explicit ``step=``
+    never falls back -- a bad requested checkpoint raises immediately.
+    """
+    fault_point("ckpt.read")
+    steps = latest_steps(ckpt_dir)
+    if not steps:
+        return None, None
+    flat_shard = dict(
+        (".".join(p), s) for p, s in _leaf_paths(shardings)) \
+        if shardings is not None else {}
+    if step is not None:
+        try:
+            return step, _load_one(ckpt_dir, step, flat_shard, verify)
+        except (OSError, ValueError, KeyError, EOFError) as e:
+            raise IOError(
+                f"requested checkpoint step {step} is not loadable: "
+                f"{e}") from e
+    errors = []
+    for cand in reversed(steps):
+        try:
+            return cand, _load_one(ckpt_dir, cand, flat_shard, verify)
+        except (OSError, ValueError, KeyError, EOFError) as e:
+            _record_skip(f"step_{cand:08d}", str(e))
+            errors.append(f"step {cand}: {e}")
+    raise IOError(
+        f"no loadable checkpoint in {ckpt_dir}: " + "; ".join(errors))

@@ -82,6 +82,23 @@ def _check_optional_str(v: Any) -> str | None:
     return v
 
 
+def _check_int_any(v: Any) -> int:
+    if not isinstance(v, int) or isinstance(v, bool):
+        raise ValueError(f"expected an int, got {v!r}")
+    return v
+
+
+def _check_fault_spec(v: Any) -> str | None:
+    """Validate the grammar BEFORE the value is stored, so a bad spec fails
+    the update() cleanly (imported here, not at module top: config must
+    stay importable before -- and without -- the ft stack)."""
+    v = _check_optional_str(v)
+    if v:
+        from repro.ft.inject import parse_fault_spec
+        parse_fault_spec(v)
+    return v
+
+
 @dataclasses.dataclass(frozen=True)
 class _Field:
     env: str                       # the legacy env var this field absorbs
@@ -136,7 +153,19 @@ FIELDS: dict[str, _Field] = {
     # force the policy globally.
     "remat": _Field("REPRO_REMAT", None, _parse_optional_str,
                     _check_optional_str),
+    # Deterministic fault injection (repro.ft.inject): ';'-separated rules
+    # '<site-glob>:<action>[@stepN][~pP]', e.g.
+    # "pallas.*:raise@step3;grad.values:nan@step5".  None/"" disarms.  The
+    # spec grammar is validated by the injector at arm time, so a bad spec
+    # fails the update() that sets it (when the injector is importable).
+    "fault_spec": _Field("REPRO_FAULT_SPEC", None, _parse_optional_str,
+                         _check_fault_spec),
+    # Seed of the injector's probability stream (the '~pP' rules).
+    "fault_seed": _Field("REPRO_FAULT_SEED", 0, int, _check_int_any),
 }
+
+#: fields whose change must re-arm the fault injector.
+_FAULT_FIELDS = ("fault_spec", "fault_seed")
 
 
 def _invalidate_plan_caches() -> None:
@@ -149,6 +178,19 @@ def _invalidate_plan_caches() -> None:
     autotune = sys.modules.get("repro.kernels.autotune")
     if autotune is not None:
         autotune.clear_memo()
+
+
+def _sync_fault_injector(import_now: bool = False) -> None:
+    """Re-arm ``repro.ft.inject`` from the current fault fields.  Lazy by
+    default (same no-cycle rule as the plan caches); ``import_now`` forces
+    the import so an explicit ``update(fault_spec=...)`` validates the
+    spec immediately instead of on first fault_point."""
+    inject = sys.modules.get("repro.ft.inject")
+    if inject is None and import_now:
+        import importlib
+        inject = importlib.import_module("repro.ft.inject")
+    if inject is not None:
+        inject.sync_from_config()
 
 
 class GlobalConfig:
@@ -189,6 +231,8 @@ class GlobalConfig:
             self._values[name] = f.default if raw is None else f.parse(raw)
             if f.plan_affecting:
                 _invalidate_plan_caches()
+            if name in _FAULT_FIELDS:
+                _sync_fault_injector()
         return self._values[name]
 
     def snapshot(self) -> dict[str, Any]:
@@ -210,18 +254,22 @@ class GlobalConfig:
             raise ValueError(
                 f"unknown config field(s) {sorted(unknown)}; fields: "
                 f"{tuple(FIELDS)}")
-        invalidate = False
+        invalidate = resync_faults = False
         for name, value in kw.items():
             f = FIELDS[name]
             value = f.check(value)
             if f.plan_affecting and self._values[name] != value:
                 invalidate = True
+            if name in _FAULT_FIELDS and self._values[name] != value:
+                resync_faults = True
             self._values[name] = value
             # An explicit update() supersedes the env var: re-snapshot so a
             # subsequent read does not "restore" the stale env value.
             self._env_raw[name] = self._env.get(f.env)
         if invalidate:
             _invalidate_plan_caches()
+        if resync_faults:
+            _sync_fault_injector(import_now=True)
 
     @contextlib.contextmanager
     def override(self, **kw):

@@ -39,6 +39,18 @@ strongest capable engine -- the substitution is recorded, never silent:
 :func:`dispatch_events` counts the engine *actually used* per pass and
 :func:`policy_decisions` keeps the per-decision reasons.
 
+The same ladder also runs at EXECUTION time (:func:`_execute`): an engine
+that *raises* mid-pass is re-dispatched down the capability chain instead
+of killing the step.  The failure edge is recorded
+(``"pass:failed->survivor"`` in :func:`dispatch_events`, exception class in
+:func:`runtime_failures`), the failing engine is quarantined for that
+(pass, geometry) and probed for recovery after
+:data:`QUARANTINE_PROBE_AFTER` dispatches, and a crashing pallas launch
+poison-marks its plan-cache entry (``autotune.poison_plan``) so
+``autotune="cached"`` cannot re-crash on restart.  ``lax`` is the terminal
+anchor: never quarantined, and if every engine fails the first exception
+propagates.
+
 Dilation is lowered per engine, declared by the ``native_dilation``
 capability flag.  Engines WITHOUT it get a dispatch-level kernel
 materialization: the kernel is zero-dilated to its effective extent
@@ -402,6 +414,8 @@ def policy_decisions() -> list[dict]:
 def reset_dispatch_events() -> None:
     DISPATCH_EVENTS.clear()
     POLICY_DECISIONS.clear()
+    RUNTIME_FAILURES.clear()
+    _QUARANTINE.clear()
 
 
 def _paper_geometry_gap(d: ConvDims) -> str | None:
@@ -508,20 +522,149 @@ def resolve_engine(requested: str, pass_name: str, d: ConvDims,
     return requested, "requested"
 
 
-def _dispatch(pass_name: str, requested: str, d: ConvDims,
-              transposed: bool = False) -> Engine:
+# ---------------------------------------------------------------------------
+# Runtime graceful degradation: execute-with-fallback, quarantine, probes
+# ---------------------------------------------------------------------------
+
+#: structured log of runtime engine failures (bounded like the decisions).
+RUNTIME_FAILURES: list[dict] = []
+
+#: a quarantined (pass, engine, geometry) is skipped for this many
+#: dispatches, then probed for recovery (each dispatch is one trace -- one
+#: step when the caller is eager, one retrace boundary under jit).
+QUARANTINE_PROBE_AFTER = 3
+
+#: (pass_key, engine, d) -> dispatches skipped since quarantine began.
+_QUARANTINE: dict[tuple, int] = {}
+
+
+def runtime_failures() -> list[dict]:
+    """Every runtime engine failure absorbed by the degradation layer:
+    pass, engine, exception class, the survivor that served the pass, and
+    the geometry.  Reset by :func:`reset_dispatch_events`."""
+    return list(RUNTIME_FAILURES)
+
+
+def quarantined_engines() -> list[dict]:
+    """The currently quarantined (pass, engine, geometry) entries and how
+    many dispatches each has been skipped for."""
+    return [{"pass": k[0], "engine": k[1], "dims": k[2], "skips": v}
+            for k, v in sorted(_QUARANTINE.items(),
+                               key=lambda kv: (kv[0][0], kv[0][1]))]
+
+
+def clear_quarantine() -> None:
+    _QUARANTINE.clear()
+
+
+def _record_event(key: str) -> None:
+    DISPATCH_EVENTS[key] = DISPATCH_EVENTS.get(key, 0) + 1
+
+
+def _dims_key(d: ConvDims) -> tuple:
+    return (d.B, d.C, d.H_i, d.W_i, d.N, d.K_h, d.K_w, d.s_h, d.s_w)
+
+
+def _runtime_chain(name: str, d: ConvDims) -> list[str]:
+    """``name`` followed by the capability-ordered engines below it --
+    the same ``bp_phase -> lax`` ladder plan-time fallback walks, with
+    ``lax`` always terminal."""
+    chain = [name]
+    for cand in _FALLBACK_CHAIN:
+        if cand != name and cand in ENGINES and \
+                _capability_gap(ENGINES[cand], d) is None:
+            chain.append(cand)
+    if "lax" not in chain:
+        chain.append("lax")
+    return chain
+
+
+def _poison_plan_entry(pass_name: str, transposed: bool, d: ConvDims) -> None:
+    """Poison-mark the plan-cache entry that fed a crashing pallas launch
+    (best effort -- poisoning must never mask the degradation itself)."""
+    from repro.core.config import config
+    if config.autotune == "off":
+        return
+    role = _TRANSPOSE_ROLE[pass_name] if transposed else pass_name
+    try:
+        from repro.kernels import autotune
+        autotune.poison_plan(role, d)
+    except Exception:
+        pass
+
+
+def _execute(pass_name: str, requested: str, d: ConvDims, transposed: bool,
+             run: Callable):
+    """Resolve one conv pass and execute it with runtime degradation.
+
+    ``run(engine)`` performs the pass.  An exception from the engine
+    re-dispatches down the capability-ordered fallback chain: the failure
+    is recorded (``dispatch_events`` gains ``"pass:failed->survivor"``,
+    :func:`runtime_failures` keeps the exception class), the failing
+    engine is QUARANTINED for this (pass, geometry) -- subsequent
+    dispatches skip it for :data:`QUARANTINE_PROBE_AFTER` rounds, then
+    probe it once; a successful probe lifts the quarantine
+    (``"pass:engine:recovered"``), a failed one re-arms it -- and a
+    crashing pallas launch poison-marks its plan-cache entry so
+    ``autotune="cached"`` cannot re-crash on restart.  ``lax`` is the
+    terminal anchor: it is never quarantined, and when every engine in
+    the chain fails the FIRST exception propagates (nothing to degrade
+    to).  The no-failure path records exactly what it always did: one
+    dispatch event, one policy decision.
+    """
     name, reason = resolve_engine(requested, pass_name, d, transposed)
     # Transposed-conv passes count under their own keys ("forward_T:pallas")
     # so a decoder's dispatch is distinguishable from its encoder's.
-    key = f"{pass_name}{'_T' if transposed else ''}:{name}"
-    DISPATCH_EVENTS[key] = DISPATCH_EVENTS.get(key, 0) + 1
-    if len(POLICY_DECISIONS) < _MAX_DECISIONS:
-        POLICY_DECISIONS.append({
-            "pass": pass_name, "requested": requested, "engine": name,
-            "reason": reason, "transpose": transposed,
-            "dims": (d.B, d.C, d.H_i, d.W_i, d.N, d.K_h, d.K_w,
-                     d.s_h, d.s_w)})
-    return ENGINES[name]
+    pkey = f"{pass_name}{'_T' if transposed else ''}"
+    first_exc = None
+    failures: list[dict] = []
+    for cand in _runtime_chain(name, d):
+        qkey = (pkey, cand, _dims_key(d))
+        probing = False
+        if qkey in _QUARANTINE and cand != "lax":
+            _QUARANTINE[qkey] += 1
+            if _QUARANTINE[qkey] <= QUARANTINE_PROBE_AFTER:
+                _record_event(f"{pkey}:{cand}:quarantined")
+                continue
+            probing = True
+            _record_event(f"{pkey}:{cand}:probe")
+        try:
+            out = run(ENGINES[cand])
+        except Exception as e:
+            if first_exc is None:
+                first_exc = e
+            if cand != "lax":
+                _QUARANTINE[qkey] = 0
+            fail = {"pass": pkey, "engine": cand,
+                    "exception": type(e).__name__, "error": str(e)[:200],
+                    "survivor": None, "probe": probing,
+                    "dims": _dims_key(d)}
+            failures.append(fail)
+            if len(RUNTIME_FAILURES) < _MAX_DECISIONS:
+                RUNTIME_FAILURES.append(fail)
+            if cand == "pallas":
+                _poison_plan_entry(pass_name, transposed, d)
+            continue
+        if probing:
+            del _QUARANTINE[qkey]
+            _record_event(f"{pkey}:{cand}:recovered")
+        for fail in failures:
+            fail["survivor"] = cand
+            _record_event(f"{pkey}:{fail['engine']}->{cand}")
+            reason = (f"runtime degradation: {fail['engine']} raised "
+                      f"{fail['exception']}; quarantined, {cand} survives")
+        _record_event(f"{pkey}:{cand}")
+        if len(POLICY_DECISIONS) < _MAX_DECISIONS:
+            POLICY_DECISIONS.append({
+                "pass": pass_name, "requested": requested, "engine": cand,
+                "reason": reason, "transpose": transposed,
+                "dims": _dims_key(d)})
+        return out
+    if first_exc is not None:
+        raise first_exc
+    raise RuntimeError(
+        f"every engine for {pkey} is quarantined for dims {_dims_key(d)}; "
+        f"chain {_runtime_chain(name, d)}")
 
 
 def _validate_policy(policy: EnginePolicy) -> EnginePolicy:
@@ -637,26 +780,41 @@ def effective_policy(explicit=None) -> EnginePolicy:
 def _conv2d(x: jax.Array, w: jax.Array, spec: ConvSpec,
             policy: EnginePolicy) -> jax.Array:
     d = spec_dims(x.shape, w.shape, spec)
-    eng = _dispatch("forward", policy.forward, d)
-    return _forward(x, _weight_for(eng, w, spec), d, eng, spec.groups)
+    return _execute(
+        "forward", policy.forward, d, False,
+        lambda eng: _forward(x, _weight_for(eng, w, spec), d, eng,
+                             spec.groups))
 
 
 def _conv2d_fwd(x, w, spec, policy):
     d = spec_dims(x.shape, w.shape, spec)
-    eng = _dispatch("forward", policy.forward, d)
-    y = _forward(x, _weight_for(eng, w, spec), d, eng, spec.groups)
+    y = _execute(
+        "forward", policy.forward, d, False,
+        lambda eng: _forward(x, _weight_for(eng, w, spec), d, eng,
+                             spec.groups))
     return y, (x, w)
+
+
+def _run_wgrad(x, dy, d, eng, spec):
+    """One engine's complete weight-grad pass, un-dilation included --
+    the degradation unit must cover the whole engine-dependent pipeline,
+    since the survivor may differ in ``native_dilation``."""
+    dw = _weight_grad(x, dy, d, eng, spec.groups)
+    if not eng.native_dilation:
+        dw = _undilate_dweight(dw, spec)
+    return dw
 
 
 def _conv2d_bwd(spec, policy, res, dy):
     x, w = res
     d = spec_dims(x.shape, w.shape, spec)
-    eng_i = _dispatch("input_grad", policy.input_grad, d)
-    eng_w = _dispatch("weight_grad", policy.weight_grad, d)
-    dx = _input_grad(dy, _weight_for(eng_i, w, spec), d, eng_i, spec.groups)
-    dw = _weight_grad(x, dy, d, eng_w, spec.groups)
-    if not eng_w.native_dilation:
-        dw = _undilate_dweight(dw, spec)
+    dx = _execute(
+        "input_grad", policy.input_grad, d, False,
+        lambda eng: _input_grad(dy, _weight_for(eng, w, spec), d, eng,
+                                spec.groups))
+    dw = _execute(
+        "weight_grad", policy.weight_grad, d, False,
+        lambda eng: _run_wgrad(x, dy, d, eng, spec))
     return dx.astype(x.dtype), dw.astype(w.dtype)
 
 
@@ -718,27 +876,29 @@ def _t_forward(x, w, d: ConvDims, eng: Engine, spec: ConvTransposeSpec):
 def _conv2d_transpose(x: jax.Array, w: jax.Array, spec: ConvTransposeSpec,
                       policy: EnginePolicy) -> jax.Array:
     d = transpose_dims(x.shape, w.shape, spec)
-    eng = _dispatch("forward", policy.forward, d, transposed=True)
-    return _t_forward(x, w, d, eng, spec)
+    return _execute("forward", policy.forward, d, True,
+                    lambda eng: _t_forward(x, w, d, eng, spec))
 
 
 def _conv2d_transpose_fwd(x, w, spec, policy):
     d = transpose_dims(x.shape, w.shape, spec)
-    eng = _dispatch("forward", policy.forward, d, transposed=True)
-    return _t_forward(x, w, d, eng, spec), (x, w)
+    y = _execute("forward", policy.forward, d, True,
+                 lambda eng: _t_forward(x, w, d, eng, spec))
+    return y, (x, w)
 
 
 def _conv2d_transpose_bwd(spec, policy, res, dy):
     x, w = res
     d = transpose_dims(x.shape, w.shape, spec)
-    eng_i = _dispatch("input_grad", policy.input_grad, d, transposed=True)
-    eng_w = _dispatch("weight_grad", policy.weight_grad, d, transposed=True)
     # dX of a transposed conv is the mirror STRIDED regular conv of dy;
     # dW is the mirror weight grad with the input/output roles swapped.
-    dx = _forward(dy, _weight_for(eng_i, w, spec), d, eng_i, spec.groups)
-    dw = _weight_grad(dy, x, d, eng_w, spec.groups)
-    if not eng_w.native_dilation:
-        dw = _undilate_dweight(dw, spec)
+    dx = _execute(
+        "input_grad", policy.input_grad, d, True,
+        lambda eng: _forward(dy, _weight_for(eng, w, spec), d, eng,
+                             spec.groups))
+    dw = _execute(
+        "weight_grad", policy.weight_grad, d, True,
+        lambda eng: _run_wgrad(dy, x, d, eng, spec))
     return dx.astype(x.dtype), dw.astype(w.dtype)
 
 

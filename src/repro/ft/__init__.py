@@ -1,2 +1,4 @@
+from repro.ft import inject  # noqa: F401  (fault-injection harness)
 from repro.ft.failures import (HeartbeatTable, StragglerDetector, RestartPlan,
-                               elastic_mesh, make_restart_plan)
+                               GuardState, elastic_mesh, make_restart_plan,
+                               make_guard_restart_plan)

@@ -33,9 +33,24 @@ class RestartPlan:
 
 
 class HeartbeatTable:
-    def __init__(self, n_workers: int, timeout_s: float = 60.0):
+    """Per-worker liveness with a deadline.
+
+    Intended semantics: a worker is dead when more than ``timeout_s`` has
+    elapsed since its LAST heartbeat, where a worker that has never beaten
+    counts as having beaten at table creation (``t0``) -- a freshly built
+    fleet gets the full ``timeout_s`` grace period to report in, instead of
+    being declared dead at t=0 before it had any chance to beat.
+
+    ``t0`` / ``beat(t=)`` / ``dead(now=)`` take an explicit clock for
+    deterministic tests; the default clock is ``time.monotonic()`` (do not
+    mix the two in one table).
+    """
+
+    def __init__(self, n_workers: int, timeout_s: float = 60.0,
+                 t0: Optional[float] = None):
         self.n = n_workers
         self.timeout = timeout_s
+        self.t0 = time.monotonic() if t0 is None else t0
         self.last: dict[int, float] = {}
 
     def beat(self, worker: int, t: Optional[float] = None):
@@ -44,7 +59,7 @@ class HeartbeatTable:
     def dead(self, now: Optional[float] = None) -> list[int]:
         now = time.monotonic() if now is None else now
         return [w for w in range(self.n)
-                if now - self.last.get(w, -1e18) > self.timeout]
+                if now - self.last.get(w, self.t0) > self.timeout]
 
 
 class StragglerDetector:
@@ -92,6 +107,63 @@ def elastic_mesh(survivors: int, model_dim: int,
     while p * 2 <= d:
         p *= 2
     return (p, m)
+
+
+@dataclasses.dataclass
+class GuardState:
+    """Loop-side escalation ladder for non-finite training steps.
+
+    The jitted guard inside ``train_step`` (``make_train_step(guard=...)``)
+    already DROPS a non-finite update in-graph -- params and optimizer
+    state pass through unchanged -- and engages the tighter gradient clip
+    once the in-graph streak reaches ``clip_after``.  This object mirrors
+    the streak on the host (feed it ``metrics["guard_bad"]`` every step)
+    and decides when to escalate past what the graph can do alone:
+
+        'skip'      1 .. clip_after-1 consecutive bad steps (update was
+                    dropped in-graph; nothing else to do)
+        'clip'      clip_after .. rollback_after-1 (the graph is now
+                    clipping; keep going)
+        'rollback'  >= rollback_after -- restore the last committed
+                    checkpoint (see :func:`make_guard_restart_plan`) and
+                    call :meth:`rolled_back`
+    """
+    clip_after: int = 2
+    rollback_after: int = 4
+    bad_streak: int = 0
+    total_bad: int = 0
+    rollbacks: int = 0
+
+    def observe(self, bad: bool) -> str:
+        """Record one step's finiteness; returns the escalation action."""
+        if not bad:
+            self.bad_streak = 0
+            return "ok"
+        self.bad_streak += 1
+        self.total_bad += 1
+        if self.bad_streak >= self.rollback_after:
+            return "rollback"
+        if self.bad_streak >= self.clip_after:
+            return "clip"
+        return "skip"
+
+    def rolled_back(self) -> None:
+        self.rollbacks += 1
+        self.bad_streak = 0
+
+
+def make_guard_restart_plan(state: GuardState, ckpt_steps: list[int],
+                            mesh_shape: tuple[int, ...] = (1, 1)) \
+        -> RestartPlan:
+    """The RestartPlan of a numerical-guard rollback: no worker died and
+    the mesh survives unchanged -- resume from the newest committed
+    checkpoint (step 0 / fresh init when none exists)."""
+    resume = ckpt_steps[-1] if ckpt_steps else 0
+    return RestartPlan(
+        failed_workers=[], resume_step=resume, mesh_shape=mesh_shape,
+        note=f"numerical guard: {state.bad_streak} consecutive non-finite "
+             f"steps ({state.total_bad} total); restore checkpoint "
+             f"{resume} and resume")
 
 
 def make_restart_plan(hb: HeartbeatTable, ckpt_steps: list[int],

@@ -26,9 +26,12 @@ useful to exercise the full path in CI), on a real TPU they measure the
 Mosaic-compiled kernels.
 
 Every resolution is observable: plans carry ``autotuned`` /
-``measured_us`` / ``candidates_timed`` / ``cache`` (``hit|miss|stale``),
-surfaced by ``ops.plan_report`` and counted in ``ops.plan_events()`` as
-``{role}_autotune_{hit,miss,stale}``.
+``measured_us`` / ``candidates_timed`` / ``cache``
+(``hit|miss|stale|poisoned``), surfaced by ``ops.plan_report`` and counted
+in ``ops.plan_events()`` as ``{role}_autotune_{hit,miss,stale,poisoned,
+measure_failed}``.  A runtime engine failure poison-marks its entry
+(:func:`poison_plan`) so ``autotune="cached"`` cannot re-crash on restart;
+a candidate that crashes while being timed is skipped, never fatal.
 """
 
 from __future__ import annotations
@@ -44,6 +47,7 @@ import jax.numpy as jnp
 
 from repro.core.config import config
 from repro.core.im2col_ref import ConvDims
+from repro.ft.inject import InjectedFault, fault_point
 from repro.kernels import ops
 
 #: bump when the key layout or entry payload changes; older files are
@@ -84,12 +88,13 @@ def _load_store() -> dict:
     """The on-disk store, or a fresh one on any read/parse/schema problem
     (a corrupt cache is a cold cache, never an error)."""
     try:
+        fault_point("plan_cache.read")
         with open(cache_path(), encoding="utf-8") as f:
             store = json.load(f)
         if (isinstance(store, dict) and store.get("schema") == CACHE_SCHEMA
                 and isinstance(store.get("entries"), dict)):
             return store
-    except (OSError, ValueError):
+    except (OSError, ValueError, InjectedFault):
         pass
     return {"schema": CACHE_SCHEMA, "entries": {}}
 
@@ -99,12 +104,13 @@ def _save_store(store: dict) -> None:
     cache dir degrades to tuning every process, not to a crash."""
     path = cache_path()
     try:
+        fault_point("plan_cache.write")
         os.makedirs(os.path.dirname(path), exist_ok=True)
         tmp = f"{path}.tmp.{os.getpid()}"
         with open(tmp, "w", encoding="utf-8") as f:
             json.dump(store, f, indent=0, sort_keys=True)
         os.replace(tmp, path)
-    except OSError as e:
+    except (OSError, InjectedFault) as e:
         warnings.warn(f"plan cache not persisted ({e}); will re-tune next "
                       f"process", RuntimeWarning, stacklevel=2)
 
@@ -148,6 +154,7 @@ def measure_plan(role: str, d: ConvDims, plan,
     """Best-of-``reps`` wall time of one conv pass in MICROSECONDS, after
     ``warmup`` untimed calls (absorbing compilation).  Each call is fenced
     with ``block_until_ready`` so async dispatch cannot flatter a plan."""
+    fault_point("autotune.measure")
     reps = config.autotune_reps if reps is None else reps
     fn = _run_fn(role, d, plan)
     for _ in range(max(1, warmup)):
@@ -190,6 +197,18 @@ def tuned_plan(role: str, d: ConvDims, budget: int, analytic):
     store = _load_store()
     entry = store["entries"].get(key)
     state = "miss"
+    if entry is not None and entry.get("poisoned"):
+        # A runtime engine failure poison-marked this entry (conv.py's
+        # degradation layer): never serve the persisted tile again.  In
+        # "cached" mode degrade to the analytic plan; "measure" mode
+        # re-tunes, and the fresh winner overwrites the poison mark.
+        ops._count_event(f"{role}_autotune_poisoned")
+        if config.autotune != "measure":
+            plan = _annotate(analytic, cache="poisoned")
+            _MEMO[key] = plan
+            return plan
+        entry = None
+        state = "poisoned"
     if entry is not None:
         plan = ops.plan_from_tile(role, d, budget, entry.get("tile", ()))
         if plan is not None:
@@ -202,7 +221,8 @@ def tuned_plan(role: str, d: ConvDims, budget: int, analytic):
             _MEMO[key] = plan
             return plan
         state = "stale"                   # geometry/budget drift or garbage
-    ops._count_event(f"{role}_autotune_{state}")
+    if state != "poisoned":               # poisoned already counted above
+        ops._count_event(f"{role}_autotune_{state}")
 
     if config.autotune != "measure":      # "cached": never time
         plan = _annotate(analytic, cache=state)
@@ -212,18 +232,50 @@ def tuned_plan(role: str, d: ConvDims, budget: int, analytic):
     cands = ops.plan_candidates(role, d, budget, k=config.autotune_top_k)
     if not cands:                         # defensive; analytic was feasible
         cands = [analytic]
-    best, best_us = None, float("inf")
+    best, best_us, timed = None, float("inf"), 0
     for cand in cands:
-        us = measure_plan(role, d, cand)
+        try:
+            us = measure_plan(role, d, cand)
+        except Exception:
+            # A candidate that crashes (lowering error, injected fault)
+            # must not kill tuning for the whole problem: skip it.
+            ops._count_event(f"{role}_autotune_measure_failed")
+            continue
+        timed += 1
         if us < best_us:
             best, best_us = cand, us
+    if best is None:                      # every candidate crashed
+        plan = _annotate(analytic, cache=state)
+        _MEMO[key] = plan
+        return plan
     best = _annotate(best, autotuned=True, measured_us=best_us,
-                     candidates_timed=len(cands), cache=state)
+                     candidates_timed=timed, cache=state)
     store["entries"][key] = {
         "tile": list(_tile_of(best).tile_key),
         "measured_us": best_us,
-        "candidates_timed": len(cands),
+        "candidates_timed": timed,
     }
     _save_store(store)
     _MEMO[key] = best
     return best
+
+
+def poison_plan(role: str, d: ConvDims, budget: int | None = None) -> str:
+    """Poison-mark the persisted plan-cache entry of one planning problem.
+
+    Called by the runtime-degradation layer (``core/conv.py``) when a
+    pallas engine execution raises: whatever plan served that launch must
+    not be served again on restart -- ``autotune="cached"`` degrades to
+    the analytic plan for the key, ``autotune="measure"`` re-tunes (a
+    successful fresh measurement overwrites the mark, which is the
+    recovery path).  Returns the poisoned key.
+    """
+    if budget is None:
+        budget = config.vmem_budget_bytes
+    key = plan_key(role, d, budget)
+    _MEMO.pop(key, None)
+    store = _load_store()
+    entry = store["entries"].get(key) or {}
+    store["entries"][key] = {**entry, "poisoned": True}
+    _save_store(store)
+    return key

@@ -62,6 +62,7 @@ import jax.numpy as jnp
 from repro.core.config import config
 from repro.core.im2col_ref import ConvDims, rot180, zero_insert, zero_pad
 from repro.core import phase_decomp
+from repro.ft.inject import fault_point
 from repro.kernels import tap_gemm as tg
 from repro.kernels.tap_gemm import _cdiv, _taps_halo
 
@@ -633,6 +634,7 @@ def conv2d_forward(x: jax.Array, w: jax.Array, d: ConvDims,
             x, w, (d.s_h, d.s_w), [(d.P_h, d.p_h_hi), (d.P_w, d.p_w_hi)],
             rhs_dilation=(d.D_h, d.D_w),
             dimension_numbers=("NCHW", "OIHW", "NCHW"))
+    fault_point("pallas.forward.launch")
     xp = zero_pad(x, d.P_h, d.P_w, d.p_h_hi, d.p_w_hi)
     src = _phase_split(_to_nhwc(xp), (d.s_h, d.s_w))  # (sh*sw, B, Hq, Wq, C)
     src = _pad_to(src, plan.cin_pad)
@@ -661,6 +663,7 @@ def conv2d_input_grad(dy: jax.Array, w: jax.Array, d: ConvDims,
     if pp is None:
         w_eff = zero_insert(w, (d.D_h, d.D_w)) if d.has_dilation else w
         return phase_decomp.input_grad_phase(dy, w_eff, d)
+    fault_point("pallas.input_grad.launch")
     tile = pp.tile
     wf = rot180(w)                                 # (N, C, k_taps, k_taps)
     blocks = []
@@ -706,6 +709,7 @@ def conv2d_weight_grad(x: jax.Array, dy: jax.Array, d: ConvDims,
     if not plan.fits:
         dw = phase_decomp.weight_grad_phase(x, dy, d)   # effective extent
         return dw[..., ::d.D_h, ::d.D_w] if d.has_dilation else dw
+    fault_point("pallas.weight_grad.launch")
     xp = zero_pad(x, d.P_h, d.P_w, d.p_h_hi, d.p_w_hi)
     src = _phase_split(_to_nhwc(xp), (d.s_h, d.s_w))
     src = _pad_to(src, plan.cin_pad)

@@ -25,7 +25,9 @@ import jax.numpy as jnp
 from repro.configs import get_config, get_smoke_config
 from repro.data.pipeline import DataConfig, make_batch
 from repro.ckpt import checkpoint as CKPT
-from repro.ft.failures import HeartbeatTable, StragglerDetector
+from repro.ft import inject
+from repro.ft.failures import (GuardState, HeartbeatTable, StragglerDetector,
+                               make_guard_restart_plan)
 from repro.models import model as M
 from repro.optim import adamw
 from repro.train import train_step as TS
@@ -85,15 +87,35 @@ def main(argv=None):
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--fault-spec", default=None,
+                    help="arm the fault injector (repro.config.fault_spec), "
+                         "e.g. 'pallas.*:raise@step3;grad.values:nan@step5'")
+    guard_group = ap.add_mutually_exclusive_group()
+    guard_group.add_argument("--guard", dest="guard", action="store_true",
+                             default=True,
+                             help="in-graph numerical guard: skip non-finite "
+                                  "steps, escalate to clip then rollback "
+                                  "(default: on)")
+    guard_group.add_argument("--no-guard", dest="guard",
+                             action="store_false")
+    ap.add_argument("--guard-clip-after", type=int, default=2,
+                    help="consecutive bad steps before the tighter grad "
+                         "clip engages")
+    ap.add_argument("--guard-rollback-after", type=int, default=4,
+                    help="consecutive bad steps before restoring the last "
+                         "committed checkpoint")
     args = ap.parse_args(argv)
 
-    if args.autotune is not None or args.plan_cache_dir is not None:
+    if args.autotune is not None or args.plan_cache_dir is not None \
+            or args.fault_spec is not None:
         from repro.core.config import config
         updates = {}
         if args.autotune is not None:
             updates["autotune"] = args.autotune
         if args.plan_cache_dir is not None:
             updates["plan_cache_dir"] = args.plan_cache_dir
+        if args.fault_spec is not None:
+            updates["fault_spec"] = args.fault_spec
         config.update(**updates)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -105,11 +127,14 @@ def main(argv=None):
                       global_batch=args.batch, vocab=cfg.vocab)
 
     opt_cfg = adamw.AdamWConfig(peak_lr=args.lr)
+    guard_cfg = TS.GuardConfig(clip_after=args.guard_clip_after) \
+        if args.guard else None
     step_fn = jax.jit(TS.make_train_step(
         cfg, opt_cfg, total_steps=args.steps,
         warmup=max(1, args.steps // 20), accum_steps=args.accum,
         conv_policy=resolve_conv_policy_args(args.conv_policy,
-                                             args.conv_mode)))
+                                             args.conv_mode),
+        guard=guard_cfg))
 
     start_step = 0
     params = opt_state = None
@@ -129,11 +154,15 @@ def main(argv=None):
 
     hb = HeartbeatTable(n_workers=1)
     straggler = StragglerDetector(n_workers=1)
+    gs = GuardState(clip_after=args.guard_clip_after,
+                    rollback_after=args.guard_rollback_after) \
+        if args.guard else None
     losses = []
     end_step = min(args.steps, args.stop_after) if args.stop_after \
         else args.steps
     for step in range(start_step, end_step):
         t0 = time.perf_counter()
+        inject.set_step(step)
         batch = jax.tree.map(jnp.asarray, make_batch(cfg, dcfg, step))
         params, opt_state, metrics = step_fn(params, opt_state, batch,
                                              jnp.int32(step))
@@ -142,6 +171,28 @@ def main(argv=None):
         dt = time.perf_counter() - t0
         hb.beat(0)
         straggler.observe([dt])
+        if gs is not None and float(metrics.get("guard_bad", 0.0)):
+            action = gs.observe(True)
+            print(f"[train] step={step} non-finite step dropped "
+                  f"(streak={gs.bad_streak}, action={action})", flush=True)
+            if action == "rollback":
+                # In-graph skip+clip did not stop the streak: restore the
+                # last committed checkpoint (fresh init when none exists).
+                CKPT.wait()
+                ckpt_steps = CKPT.latest_steps(args.ckpt_dir) \
+                    if args.ckpt_dir else []
+                plan = make_guard_restart_plan(gs, ckpt_steps)
+                print(f"[train] {plan.note}", flush=True)
+                if ckpt_steps:
+                    _, restored = CKPT.restore(args.ckpt_dir)
+                    params = jax.tree.map(jnp.asarray, restored["params"])
+                    opt_state = jax.tree.map(jnp.asarray, restored["opt"])
+                else:
+                    params = model.init(jax.random.PRNGKey(args.seed))
+                    opt_state = adamw.init_state(params)
+                gs.rolled_back()
+        elif gs is not None:
+            gs.observe(False)
         if step % args.log_every == 0 or step == args.steps - 1:
             print(f"[train] step={step} loss={loss:.4f} "
                   f"gnorm={float(metrics['grad_norm']):.3f} "
@@ -152,6 +203,10 @@ def main(argv=None):
     if args.ckpt_dir:
         CKPT.save(args.ckpt_dir, end_step - 1,
                   {"params": params, "opt": opt_state}, blocking=True)
+    CKPT.wait()                       # join any async write before exit
+    if gs is not None and gs.total_bad:
+        print(f"[train] guard: {gs.total_bad} non-finite steps dropped, "
+              f"{gs.rollbacks} rollbacks")
     print(f"[train] done: first_loss={losses[0]:.4f} "
           f"last_loss={losses[-1]:.4f}")
     return losses

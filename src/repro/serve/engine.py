@@ -16,6 +16,7 @@ left as a documented extension.)
 from __future__ import annotations
 
 import dataclasses
+import time
 
 import jax
 import jax.numpy as jnp
@@ -33,16 +34,27 @@ class Request:
     max_new: int
     out: list[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    #: wall-clock budget from ``submit()`` in seconds; ``None`` = no limit.
+    #: An overdue request is finalized with whatever tokens it has and
+    #: ``status="timed_out"`` -- a slow wave degrades THAT request, not the
+    #: whole batch.
+    deadline_s: float | None = None
+    status: str = "ok"
+    t_submit: float = 0.0
 
 
 class Engine:
     def __init__(self, cfg: ArchConfig, params, max_batch: int = 4,
                  max_len: int = 256, temperature: float = 0.0,
-                 pad_id: int = 0, seed: int = 0, conv_policy=None):
+                 pad_id: int = 0, seed: int = 0, conv_policy=None,
+                 clock=time.monotonic):
         """``conv_policy``: per-pass conv engine override for the decode
         path (EnginePolicy, policy string, or uniform engine name) --
         serving can pin e.g. a forward-only engine without touching the
-        training config."""
+        training config.
+
+        ``clock``: zero-arg wall-clock (seconds) used for request
+        deadlines; injectable for deterministic tests."""
         assert not cfg.is_encoder_only, "encoder-only archs do not decode"
         if conv_policy is not None:
             cfg = dataclasses.replace(cfg, conv_policy=str(conv_policy),
@@ -55,13 +67,34 @@ class Engine:
         self.pad_id = pad_id
         self.queue: list[Request] = []
         self.key = jax.random.PRNGKey(seed)
+        self.clock = clock
+        self.counters = {"completed": 0, "timed_out": 0, "waves": 0}
         self._decode = jax.jit(
             lambda p, c, t, pos: M.decode_step(p, c, t, pos, cfg))
 
     def submit(self, req: Request):
+        req.t_submit = self.clock()
         self.queue.append(req)
 
+    def _expire(self, wave: list[Request]) -> None:
+        """Finalize overdue requests: keep the tokens generated so far,
+        mark ``status="timed_out"``."""
+        now = self.clock()
+        for r in wave:
+            if (not r.done and r.deadline_s is not None
+                    and now - r.t_submit > r.deadline_s):
+                r.done = True
+                r.status = "timed_out"
+                self.counters["timed_out"] += 1
+
+    def run_summary(self) -> dict:
+        """Counters of the engine's lifetime: completed / timed_out
+        requests and waves run."""
+        return dict(self.counters)
+
     def _run_wave(self, wave: list[Request]) -> None:
+        self.counters["waves"] += 1
+        self._expire(wave)            # queue wait may already be overdue
         b = self.max_batch
         plen = max(len(r.prompt) for r in wave)
         toks = np.full((b, plen), self.pad_id, np.int32)
@@ -71,12 +104,17 @@ class Engine:
         # Lockstep prefill through the decode path.
         logits = None
         for t in range(plen):
+            if all(r.done for r in wave):
+                break
             logits, cache = self._decode(self.params, cache,
                                          jnp.asarray(toks[:, t]),
                                          jnp.int32(t))
         pos = plen
         max_new = max(r.max_new for r in wave)
+        self._expire(wave)
         for _ in range(min(max_new, self.max_len - plen)):
+            if logits is None or all(r.done for r in wave):
+                break
             lg = np.asarray(logits, np.float32)
             nxt = np.zeros(b, np.int32)
             for i, r in enumerate(wave):
@@ -93,13 +131,17 @@ class Engine:
                 nxt[i] = tok
                 if len(r.out) >= r.max_new:
                     r.done = True
+            self._expire(wave)        # deadline checked after every token
             if all(r.done for r in wave):
                 break
             logits, cache = self._decode(self.params, cache,
                                          jnp.asarray(nxt), jnp.int32(pos))
             pos += 1
         for r in wave:
-            r.done = True
+            if not r.done:
+                r.done = True
+            if r.status == "ok":
+                self.counters["completed"] += 1
 
     def run(self) -> list[Request]:
         """Drain the queue; returns finished requests."""

@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
+from repro.ft import inject
 from repro.models import model as M
 from repro.optim import adamw, schedule
 from repro.train import losses
@@ -27,6 +28,24 @@ def loss_fn(params, batch, cfg: ArchConfig):
     return losses.train_loss(logits, aux, batch)
 
 
+@dataclasses.dataclass(frozen=True)
+class GuardConfig:
+    """In-graph numerical guard for the train step.
+
+    A step whose loss or gradient global-norm is non-finite is DROPPED:
+    params and optimizer state pass through unchanged (a ``jnp.where``
+    select, so the step stays jittable -- no host round-trip).  The
+    consecutive-bad streak rides in ``opt_state["guard_streak"]``; once it
+    reaches ``clip_after`` the NEXT steps additionally clip gradients to
+    ``clip_norm`` (tighter than the optimizer's own clip) until a step
+    lands finite.  Escalation past clipping -- rollback to the last
+    committed checkpoint -- is loop-side: feed ``metrics["guard_bad"]`` to
+    ``repro.ft.GuardState`` (see ``launch/train.py``).
+    """
+    clip_after: int = 2
+    clip_norm: float = 0.5
+
+
 def make_train_step(cfg: ArchConfig, opt_cfg: adamw.AdamWConfig,
                     *, total_steps: int = 10000, warmup: int = 100,
                     schedule_name: str | None = None,
@@ -34,7 +53,8 @@ def make_train_step(cfg: ArchConfig, opt_cfg: adamw.AdamWConfig,
                     compress_grads: bool = False,
                     conv_policy=None,
                     conv_mode: str | None = None,
-                    loss: Callable | None = None) -> Callable:
+                    loss: Callable | None = None,
+                    guard: GuardConfig | bool | None = None) -> Callable:
     """compress_grads: int8-quantize gradients with error feedback before
     the optimizer -- models the numerics of a compressed cross-pod gradient
     all-reduce (the EF residual rides in opt_state['ef']).
@@ -52,9 +72,19 @@ def make_train_step(cfg: ArchConfig, opt_cfg: adamw.AdamWConfig,
     default LM loss -- e.g. ``repro.models.model.autoencoder_loss`` with an
     ``AutoencoderConfig`` (any frozen dataclass carrying ``name`` /
     ``conv_policy`` / ``conv_mode`` works as ``cfg`` then); the optimizer,
-    schedules, accumulation and gradient compression apply unchanged."""
+    schedules, accumulation and gradient compression apply unchanged.
+
+    guard: a :class:`GuardConfig` (or ``True`` for the defaults) arms the
+    in-graph numerical guard -- non-finite steps are skipped, a
+    consecutive-bad streak escalates to tighter gradient clipping, and
+    ``metrics`` gain ``guard_bad`` / ``guard_streak`` / ``guard_clipped``.
+    ``None``/``False`` (the default) compiles the exact unguarded step."""
     if loss is None:
         loss = loss_fn
+    if guard is True:
+        guard = GuardConfig()
+    elif guard is False:
+        guard = None
     if conv_mode is not None:
         warnings.warn(
             "make_train_step(conv_mode=...) is deprecated; pass "
@@ -73,6 +103,9 @@ def make_train_step(cfg: ArchConfig, opt_cfg: adamw.AdamWConfig,
     sched = schedule.SCHEDULES[sched_name]
 
     def train_step(params, opt_state, batch, step):
+        opt_in = opt_state            # pre-step state (the compress block
+        # rebinds opt_state; the guard's skip-select must compare against
+        # what actually entered the step)
         if accum_steps == 1:
             (loss_val, metrics), grads = jax.value_and_grad(
                 loss, has_aux=True)(params, batch, cfg)
@@ -98,6 +131,14 @@ def make_train_step(cfg: ArchConfig, opt_cfg: adamw.AdamWConfig,
             loss_val = loss_val / accum_steps
             metrics = jax.tree.map(lambda x: x.mean(), ms)
 
+        # Fault injection on the gradient VALUES must live in-graph: the
+        # armed steps are read at trace time, the step comparison runs on
+        # device -- so a jitted step still poisons exactly step N.
+        nan_steps = inject.value_fault_steps("grad.values")
+        if nan_steps is not None:
+            factor = inject.nan_factor(step, nan_steps)
+            grads = jax.tree.map(lambda g: g * factor, grads)
+
         if compress_grads:
             from repro.optim import compression
             ef = opt_state.get("ef") or jax.tree.map(
@@ -109,14 +150,51 @@ def make_train_step(cfg: ArchConfig, opt_cfg: adamw.AdamWConfig,
             grads = compression.decompress_tree_int8(q)
             opt_state = {**opt_state, "ef": residual}
 
+        if guard is not None:
+            streak0 = opt_state.get("guard_streak",
+                                    jnp.zeros((), jnp.int32))
+            gnorm = adamw.global_norm(grads)
+            # One cheap reduction catches every inf/NaN leaf: a single
+            # non-finite value makes the sqrt-of-sum-of-squares non-finite.
+            finite = jnp.isfinite(loss_val) & jnp.isfinite(gnorm)
+            clipping = streak0 >= guard.clip_after
+            gscale = jnp.where(
+                clipping,
+                jnp.minimum(1.0, guard.clip_norm / jnp.maximum(gnorm, 1e-12)),
+                1.0)
+            grads = jax.tree.map(lambda g: g * gscale, grads)
+
         lr = sched(step + 1, peak_lr=opt_cfg.peak_lr, warmup=warmup,
                    total=total_steps)
         new_params, new_opt, opt_metrics = adamw.apply_updates(
-            params, grads, {k: v for k, v in opt_state.items() if k != "ef"},
+            params, grads,
+            {k: v for k, v in opt_state.items()
+             if k not in ("ef", "guard_streak")},
             lr, opt_cfg)
         if compress_grads:
             new_opt["ef"] = opt_state["ef"]
         metrics = {**metrics, **opt_metrics}
+
+        if guard is not None:
+            # Skip-step select: a non-finite step passes params and
+            # optimizer state through unchanged.  Missing old keys (e.g.
+            # "ef" on the very first compressed step) select against
+            # zeros, never against a NaN-tainted new value.
+            def keep_old(new, old):
+                return jax.tree.map(
+                    lambda n, o: jnp.where(finite, n, o), new, old)
+            new_params = keep_old(new_params, params)
+            new_opt = {
+                k: keep_old(v, opt_in[k] if k in opt_in
+                            else jax.tree.map(jnp.zeros_like, v))
+                for k, v in new_opt.items()}
+            streak = jnp.where(finite, 0, streak0 + 1)
+            new_opt["guard_streak"] = streak
+            metrics = {**metrics,
+                       "guard_bad": (~finite).astype(jnp.float32),
+                       "guard_streak": streak.astype(jnp.float32),
+                       "guard_clipped":
+                           (clipping & finite).astype(jnp.float32)}
         return new_params, new_opt, metrics
 
     return train_step
