@@ -1,0 +1,330 @@
+"""Serving benchmark: static wave batching vs continuous batching.
+
+Drives the SAME synthetic open-loop arrival stream through the static
+wave engine (``repro.serve.engine``) and the slotted continuous-batching
+engine (``repro.serve.continuous``) and records, per engine:
+
+  * ``prefill_tokens_per_s``  -- prompt tokens prefilled per prefill-second
+  * ``decode_steps_per_s``    -- USEFUL per-lane decode steps (== generated
+                                 tokens) per decode-second; wave batching
+                                 burns dispatches on finished lanes, which
+                                 this metric charges it for
+  * ``p50_latency_s`` / ``p99_latency_s`` -- request submit -> finalize
+  * ``occupancy``             -- lane_steps / (decode_steps * max_batch),
+                                 the fraction of dispatched lane-slots that
+                                 were still generating
+
+The workload is deliberately skewed (alternating short / long ``max_new``)
+with arrivals injected mid-flight through the engines' ``on_step`` hook:
+exactly the mix where wave batching wastes lanes on stragglers and parks
+queued requests at wave boundaries, and where the continuous engine's
+admit-on-free-lane policy should win.  Prompts within the stream share one
+length so the static engine's left-padding is a no-op and greedy outputs
+are comparable token-for-token.
+
+Structural gates (tolerance-free, every run):
+  * greedy outputs are TOKEN-IDENTICAL per request across both engines;
+  * the continuous engine really ran continuous batching
+    (``engine_kind == "continuous"`` and ``inserts > 0`` -- a silent
+    fallback to wave batching cannot fake both);
+  * continuous beats static on p99 latency AND decode_steps_per_s.
+    These two are wall-clock-derived, so a failure is re-measured once
+    and only fails when it REPRODUCES (a loaded shared CPU can squeeze
+    the dispatch-rate gap for one run; the token and no-fallback gates
+    are deterministic and never retried).
+
+    PYTHONPATH=src python benchmarks/bench_serve.py [--tiny] \
+        [--json BENCH_serve.json] [--compare BENCH_serve.json]
+
+``--compare PATH`` additionally gates the machine-portable
+continuous/static RATIOS against the committed baseline record: p99 and
+decode-rate ratios may not regress by more than ``--tolerance`` (default
+50%); wall-clock ratio failures are re-measured once so only REPRODUCED
+regressions fail (shared-CPU wall-clock is long-tailed).  Absolute
+timings are recorded for information but never gated -- they are not
+portable across machines.  The committed ``BENCH_serve.json`` is a
+``--tiny`` record; CI runs ``--tiny --compare BENCH_serve.json``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+import time
+
+import jax
+import numpy as np
+
+sys.path.insert(0, "src")
+
+from repro.configs import get_smoke_config            # noqa: E402
+from repro.models import model as M                   # noqa: E402
+from repro.serve.continuous import ContinuousEngine   # noqa: E402
+from repro.serve.engine import Engine                 # noqa: E402
+from repro.serve.request import Request               # noqa: E402
+
+ENGINES = {"static": Engine, "continuous": ContinuousEngine}
+
+#: workload knobs: equal-length prompts (token-equivalence across the
+#: engines), skewed max_new mix (the wave-batching pathology), arrivals
+#: every ``arrival_gap`` decode dispatches.
+WORKLOAD = dict(arch="smollm-360m", requests=32, max_batch=4,
+                prompt_len=8, max_new_mix=(2, 24), arrival_gap=1,
+                warmup_requests=3)
+
+TINY_WORKLOAD = dict(arch="smollm-360m", requests=16, max_batch=4,
+                     prompt_len=6, max_new_mix=(2, 16), arrival_gap=1,
+                     warmup_requests=2)
+
+
+def _make_requests(wl: dict, seed: int = 0) -> list[Request]:
+    """The deterministic request stream (fresh Request objects per call --
+    engines mutate them)."""
+    cfg = get_smoke_config(wl["arch"])
+    rng = np.random.RandomState(seed)
+    prompts = [rng.randint(0, cfg.vocab, wl["prompt_len"]).tolist()
+               for _ in range(wl["requests"])]
+    mix = wl["max_new_mix"]
+    return [Request(rid=i, prompt=p, max_new=mix[i % len(mix)])
+            for i, p in enumerate(prompts)]
+
+
+def _percentile(sorted_vals: list[float], q: float) -> float:
+    if not sorted_vals:
+        return float("nan")
+    i = min(len(sorted_vals) - 1,
+            max(0, math.ceil(q * len(sorted_vals)) - 1))
+    return sorted_vals[i]
+
+
+def drive(engine_cls, cfg, params, wl: dict, seed: int = 0) -> dict:
+    """Run the open-loop stream through one engine; returns metrics plus
+    the per-request greedy outputs.
+
+    Arrival clock: one tick per decode dispatch (the ``on_step`` hook),
+    request ``i`` arrives at tick ``i * arrival_gap``.  If the engine goes
+    fully idle before the next arrival, the clock jumps there (open-loop
+    arrivals never depend on engine progress).  A warmup prefix of
+    requests is served first through the SAME engine instance to pay all
+    jit compilation outside the measured window.
+    """
+    max_new_max = max(wl["max_new_mix"])
+    eng = engine_cls(cfg, params, max_batch=wl["max_batch"],
+                     max_len=wl["prompt_len"] + max_new_max + 2,
+                     temperature=0.0, seed=seed)
+
+    # -- warmup: compile prefill / insert / decode off the clock ----------
+    for r in _make_requests(wl, seed=seed + 1)[:wl["warmup_requests"]]:
+        eng.submit(r)
+    eng.run()
+    for k in eng.stats:
+        eng.stats[k] = 0 if isinstance(eng.stats[k], int) else 0.0
+    counters0 = dict(eng.counters)
+
+    reqs = _make_requests(wl, seed=seed)
+    arrival = [i * wl["arrival_gap"] for i in range(len(reqs))]
+    state = {"tick": 0, "idx": 0}
+
+    def flush(e):
+        while (state["idx"] < len(reqs)
+               and arrival[state["idx"]] <= state["tick"]):
+            e.submit(reqs[state["idx"]])
+            state["idx"] += 1
+
+    def on_step(e):
+        state["tick"] += 1
+        flush(e)
+
+    eng.on_step = on_step
+    finished: list[Request] = []
+    t0 = time.perf_counter()
+    flush(eng)
+    while state["idx"] < len(reqs) or eng.queue:
+        if not eng.queue and state["idx"] < len(reqs):
+            state["tick"] = arrival[state["idx"]]      # engine went idle
+            flush(eng)
+        finished.extend(eng.run())
+    wall = time.perf_counter() - t0
+    eng.on_step = None
+
+    assert len(finished) == len(reqs), \
+        f"engine lost requests: {len(finished)} of {len(reqs)} finished"
+    lat = sorted(r.t_done - r.t_submit for r in finished)
+    st = eng.stats
+    decode_steps = eng.counters["decode_steps"] - counters0["decode_steps"]
+    lane_slots = decode_steps * wl["max_batch"]
+    return {
+        "engine_kind": getattr(eng, "engine_kind", "static"),
+        "wall_s": round(wall, 4),
+        "prefill_tokens_per_s": round(
+            st["prefill_tokens"] / st["prefill_s"], 1)
+            if st["prefill_s"] else 0.0,
+        "decode_steps_per_s": round(st["lane_steps"] / st["decode_s"], 1)
+            if st["decode_s"] else 0.0,
+        "p50_latency_s": round(_percentile(lat, 0.50), 4),
+        "p99_latency_s": round(_percentile(lat, 0.99), 4),
+        "occupancy": round(st["lane_steps"] / lane_slots, 3)
+            if lane_slots else 0.0,
+        "tokens": st["tokens"],
+        "decode_steps": decode_steps,
+        "inserts": eng.counters.get("inserts", 0)
+            - counters0.get("inserts", 0),
+        "summary": eng.run_summary(),
+        "outputs": {r.rid: list(r.out) for r in finished},
+        "statuses": {r.rid: r.status for r in finished},
+    }
+
+
+def run(wl: dict, seed: int = 0) -> dict:
+    """Both engines over the same stream -> the benchmark record."""
+    cfg = get_smoke_config(wl["arch"])
+    params = M.build_model(cfg).init(jax.random.PRNGKey(seed))
+    res = {name: drive(cls, cfg, params, wl, seed=seed)
+           for name, cls in ENGINES.items()}
+    s, c = res["static"], res["continuous"]
+    tokens_match = s["outputs"] == c["outputs"]
+    record = {
+        "bench": "bench_serve",
+        "schema": 1,
+        "workload": {k: list(v) if isinstance(v, tuple) else v
+                     for k, v in wl.items()},
+        "engines": {name: {k: v for k, v in r.items() if k != "outputs"}
+                    for name, r in res.items()},
+        "tokens_match": tokens_match,
+        # Machine-portable continuous/static ratios -- the --compare gate.
+        "ratios": {
+            "p99_latency": round(c["p99_latency_s"] / s["p99_latency_s"], 3)
+                if s["p99_latency_s"] else float("nan"),
+            "decode_steps_per_s": round(
+                c["decode_steps_per_s"] / s["decode_steps_per_s"], 3)
+                if s["decode_steps_per_s"] else float("nan"),
+            "occupancy": round(c["occupancy"] / s["occupancy"], 3)
+                if s["occupancy"] else float("nan"),
+        },
+    }
+    return record
+
+
+def structural_problems(record: dict) -> list[str]:
+    """The tolerance-free gates every run must pass."""
+    problems = []
+    c = record["engines"]["continuous"]
+    if not record["tokens_match"]:
+        problems.append(
+            "greedy outputs differ between the static and continuous "
+            "engines (slot surgery or per-lane positions corrupt decode)")
+    if c["engine_kind"] != "continuous" or c["inserts"] <= 0:
+        problems.append(
+            f"continuous engine fell back to wave batching "
+            f"(engine_kind={c['engine_kind']!r}, inserts={c['inserts']})")
+    if not record["ratios"]["p99_latency"] < 1.0:
+        problems.append(
+            f"continuous does not beat static on p99 latency "
+            f"(ratio {record['ratios']['p99_latency']})")
+    if not record["ratios"]["decode_steps_per_s"] > 1.0:
+        problems.append(
+            f"continuous does not beat static on decode steps/s "
+            f"(ratio {record['ratios']['decode_steps_per_s']})")
+    return problems
+
+
+def compare_records(record: dict, baseline: dict,
+                    tolerance: float = 0.50) -> list[str]:
+    """Ratio regressions vs the committed baseline (the wall-clock part;
+    structural gates run separately and are tolerance-free)."""
+    problems = []
+    if record["workload"] != baseline.get("workload"):
+        problems.append(
+            f"workload mismatch vs baseline: {record['workload']} != "
+            f"{baseline.get('workload')} (regenerate the baseline)")
+        return problems
+    br = baseline.get("ratios", {})
+    r = record["ratios"]
+    # p99 ratio: smaller is better -> fail when it GREW past tolerance.
+    if r["p99_latency"] > br["p99_latency"] * (1.0 + tolerance):
+        problems.append(
+            f"p99_latency ratio regressed: {r['p99_latency']} vs baseline "
+            f"{br['p99_latency']} (+ more than {tolerance:.0%})")
+    # decode-rate ratio: larger is better -> fail when it SHRANK.
+    if r["decode_steps_per_s"] < br["decode_steps_per_s"] \
+            * (1.0 - tolerance):
+        problems.append(
+            f"decode_steps_per_s ratio regressed: "
+            f"{r['decode_steps_per_s']} vs baseline "
+            f"{br['decode_steps_per_s']} (- more than {tolerance:.0%})")
+    return problems
+
+
+def _print_table(record: dict) -> None:
+    cols = ("wall_s", "prefill_tokens_per_s", "decode_steps_per_s",
+            "p50_latency_s", "p99_latency_s", "occupancy", "tokens")
+    print("engine," + ",".join(cols))
+    for name, r in record["engines"].items():
+        print(name + "," + ",".join(str(r[k]) for k in cols))
+    print(f"ratios(continuous/static): {record['ratios']}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="small stream (the CI smoke lane)")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write the machine-readable benchmark record")
+    ap.add_argument("--compare", metavar="PATH", default=None,
+                    help="exit non-zero on ratio regression vs this "
+                         "baseline record")
+    ap.add_argument("--tolerance", type=float, default=0.50,
+                    help="allowed relative drift of the continuous/static "
+                         "ratios for --compare (structural gates are "
+                         "tolerance-free)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    wl = TINY_WORKLOAD if args.tiny else WORKLOAD
+    record = run(wl, seed=args.seed)
+    _print_table(record)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(record, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {args.json}", file=sys.stderr)
+    problems = structural_problems(record)
+    if problems:
+        # Token identity and the no-fallback gate are deterministic; the
+        # two "continuous beats static" gates ride wall clock, so confirm
+        # a failure on a fresh measurement before failing the run.
+        record2 = run(wl, seed=args.seed)
+        second = structural_problems(record2)
+        problems = [p for p in problems
+                    if p.split("(", 1)[0] in
+                    {q.split("(", 1)[0] for q in second}]
+    if problems:
+        print("STRUCTURAL FAILURE", file=sys.stderr)
+        for p in problems:
+            print("  " + p, file=sys.stderr)
+        raise SystemExit(1)
+    if args.compare:
+        with open(args.compare) as f:
+            baseline = json.load(f)
+        problems = compare_records(record, baseline, args.tolerance)
+        if problems:
+            # Wall-clock ratios are long-tailed on shared CPUs: re-measure
+            # once and keep only findings that REPRODUCE.
+            record2 = run(wl, seed=args.seed)
+            second = set(compare_records(record2, baseline,
+                                         args.tolerance))
+            problems = [p for p in problems
+                        if p.split(":", 1)[0] in
+                        {q.split(":", 1)[0] for q in second}]
+        if problems:
+            print("PERF REGRESSION vs " + args.compare, file=sys.stderr)
+            for p in problems:
+                print("  " + p, file=sys.stderr)
+            raise SystemExit(1)
+        print(f"no regression vs {args.compare} "
+              f"(tolerance {args.tolerance:.0%})", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -2,9 +2,11 @@
 
 Every failure domain in the stack registers a NAMED SITE through the one
 :func:`fault_point` helper -- the Pallas kernel launches, the plan-cache
-read/write, the autotune timing harness, the checkpoint writer/reader, and
-the gradient values of the train step.  A fault spec arms rules against
-those sites:
+read/write, the autotune timing harness, the checkpoint writer/reader,
+the gradient values of the train step, and the continuous serving
+engine's per-request prefill / per-lane decode (a crashing lane
+finalizes that request with ``status="failed"`` instead of killing the
+batch).  A fault spec arms rules against those sites:
 
     config.update(fault_spec="pallas.*:raise@step3;grad.values:nan@step5")
 
@@ -64,6 +66,8 @@ KNOWN_SITES = frozenset({
     "ckpt.write",                 # ckpt/checkpoint.py: manifest+leaf writer
     "ckpt.read",                  # ckpt/checkpoint.py: restore
     "grad.values",                # train loops: the gradient pytree itself
+    "serve.prefill",              # serve/continuous.py: per-request prefill
+    "serve.decode",               # serve/continuous.py: per-lane decode step
 })
 
 ACTIONS = ("raise", "nan")

@@ -57,17 +57,21 @@ def _sdpa_dense(q, k, v, *, causal, window, q_offset, kv_len, scale):
     qh = q.reshape(b, lq, hk, g, dh)
     logits = jnp.einsum("bqkgd,bskd->bkgqs", qh, k).astype(jnp.float32)
     logits *= scale
-    q_pos = q_offset + jnp.arange(lq)[:, None]
+    # q_offset / kv_len are scalars under wave batching (one position clock
+    # for the whole batch) or per-lane (B,) vectors under continuous
+    # batching (every lane sits at its own position); a leading batch dim
+    # broadcasts through the (Lq, Lk) mask.
+    q_pos = jnp.asarray(q_offset)[..., None, None] + jnp.arange(lq)[:, None]
     k_pos = jnp.arange(lk)[None, :]
     mask = jnp.ones((lq, lk), bool)
     if causal:
-        mask &= q_pos >= k_pos
+        mask = mask & (q_pos >= k_pos)
     if window is not None:
-        mask &= q_pos - k_pos < window
-    logits = jnp.where(mask[None, None, None], logits, -1e30)
+        mask = mask & (q_pos - k_pos < window)
     if kv_len is not None:
-        valid = (k_pos < kv_len)[None, :, :]          # (1,1,Lk) broadcast
-        logits = jnp.where(valid[:, None, None], logits, -1e30)
+        mask = mask & (k_pos < jnp.asarray(kv_len)[..., None, None])
+    mask = jnp.broadcast_to(mask, (b, lq, lk))
+    logits = jnp.where(mask[:, None, None], logits, -1e30)
     p = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
     out = jnp.einsum("bkgqs,bskd->bqkgd", p, v)
     return out.reshape(b, lq, h, dh)
@@ -206,15 +210,31 @@ def gqa_init_cache(cfg: ArchConfig, batch: int, max_len: int, nl: int):
 
 
 def gqa_decode(p, x, cache_k, cache_v, pos, cfg: ArchConfig, *, window=None):
-    """x (B,1,D); cache_k/v (B,Lmax,Hk,Dh); pos scalar -> (out, k, v)."""
+    """x (B,1,D); cache_k/v (B,Lmax,Hk,Dh) -> (out, k, v).
+
+    ``pos`` is a scalar (wave batching: one position clock for the whole
+    batch, cache update lowers to one dynamic_update_slice) or a per-lane
+    (B,) vector (continuous batching: every lane writes its own slot --
+    one scatter, the cost the slotted engine pays for mid-stream
+    admission)."""
     b, _, d = x.shape
     h, hk, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
-    ang = L.rope_freqs(dh, cfg.rope_theta, pos[None].astype(jnp.float32))
+    pos = jnp.asarray(pos)
+    per_lane = pos.ndim == 1
+    ang = L.rope_freqs(dh, cfg.rope_theta,
+                       (pos if per_lane else pos[None]).astype(jnp.float32))
+    if per_lane:
+        ang = ang[:, None, :]                 # (B, 1, Dh/2): one pos per lane
     q = L.apply_rope(_split_heads(L.linear(p["wq"], x), h, dh), ang)
     k = L.apply_rope(_split_heads(L.linear(p["wk"], x), hk, dh), ang)
     v = _split_heads(L.linear(p["wv"], x), hk, dh)
-    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k.astype(cache_k.dtype), pos, axis=1)
-    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v.astype(cache_v.dtype), pos, axis=1)
+    if per_lane:
+        lanes = jnp.arange(b)
+        cache_k = cache_k.at[lanes, pos].set(k[:, 0].astype(cache_k.dtype))
+        cache_v = cache_v.at[lanes, pos].set(v[:, 0].astype(cache_v.dtype))
+    else:
+        cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k.astype(cache_k.dtype), pos, axis=1)
+        cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v.astype(cache_v.dtype), pos, axis=1)
     o = _sdpa(q, cache_k, cache_v, causal=False, window=window,
               q_offset=pos, kv_len=pos + 1)
     if window is not None:
@@ -291,23 +311,37 @@ def mla_init_cache(cfg: ArchConfig, batch: int, max_len: int, nl: int):
 def mla_decode(p, x, c_kv_cache, k_rope_cache, pos, cfg: ArchConfig):
     """Absorbed-weight MLA decode: attention runs in the latent space.
 
-    x (B,1,D); c_kv_cache (B,Lmax,kvr); k_rope_cache (B,Lmax,dr).
+    x (B,1,D); c_kv_cache (B,Lmax,kvr); k_rope_cache (B,Lmax,dr); pos is
+    a scalar (wave batching) or a per-lane (B,) vector (continuous
+    batching -- see :func:`gqa_decode`).
     """
     b = x.shape[0]
     h = cfg.n_heads
     dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
     kvr = cfg.kv_lora_rank
-    ang = L.rope_freqs(dr, cfg.rope_theta, pos[None].astype(jnp.float32))
+    pos = jnp.asarray(pos)
+    per_lane = pos.ndim == 1
+    ang = L.rope_freqs(dr, cfg.rope_theta,
+                       (pos if per_lane else pos[None]).astype(jnp.float32))
+    if per_lane:
+        ang = ang[:, None, :]                 # (B, 1, dr/2): one pos per lane
     q = L.linear(p["wq_b"], L.rmsnorm(p["q_norm"], L.linear(p["wq_a"], x)))
     q = q.reshape(b, 1, h, dn + dr)
     q_nope, q_rope = q[..., :dn], L.apply_rope(q[..., dn:], ang)
     kv = L.linear(p["wkv_a"], x)
     c_kv = L.rmsnorm(p["kv_norm"], kv[..., :kvr])                   # (B,1,kvr)
     k_rope = L.apply_rope(kv[..., None, kvr:], ang)[:, :, 0]        # (B,1,dr)
-    c_kv_cache = jax.lax.dynamic_update_slice_in_dim(
-        c_kv_cache, c_kv.astype(c_kv_cache.dtype), pos, axis=1)
-    k_rope_cache = jax.lax.dynamic_update_slice_in_dim(
-        k_rope_cache, k_rope.astype(k_rope_cache.dtype), pos, axis=1)
+    if per_lane:
+        lanes = jnp.arange(b)
+        c_kv_cache = c_kv_cache.at[lanes, pos].set(
+            c_kv[:, 0].astype(c_kv_cache.dtype))
+        k_rope_cache = k_rope_cache.at[lanes, pos].set(
+            k_rope[:, 0].astype(k_rope_cache.dtype))
+    else:
+        c_kv_cache = jax.lax.dynamic_update_slice_in_dim(
+            c_kv_cache, c_kv.astype(c_kv_cache.dtype), pos, axis=1)
+        k_rope_cache = jax.lax.dynamic_update_slice_in_dim(
+            k_rope_cache, k_rope.astype(k_rope_cache.dtype), pos, axis=1)
     # Absorb wkv_b's key half into the query: q_lat (B,1,H,kvr)
     wkv_b = p["wkv_b"]["w"].reshape(kvr, h, dn + dv)
     w_k = wkv_b[..., :dn]                                           # (kvr,H,dn)
@@ -318,7 +352,8 @@ def mla_decode(p, x, c_kv_cache, k_rope_cache, pos, cfg: ArchConfig):
               + jnp.einsum("bqhd,bsd->bhqs", q_rope,
                            k_rope_cache.astype(x.dtype))) * scale
     k_pos = jnp.arange(c_kv_cache.shape[1])[None, None, None, :]
-    logits = jnp.where(k_pos <= pos, logits.astype(jnp.float32), -1e30)
+    lim = pos[:, None, None, None] if per_lane else pos
+    logits = jnp.where(k_pos <= lim, logits.astype(jnp.float32), -1e30)
     pr = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
     o_lat = jnp.einsum("bhqs,bsr->bqhr", pr, c_kv_cache.astype(x.dtype))
     o = jnp.einsum("bqhr,rhd->bqhd", o_lat, w_v.astype(x.dtype))

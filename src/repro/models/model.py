@@ -34,6 +34,7 @@ class Model:
     forward: Callable[..., Any]
     init_cache: Callable[..., Any]
     decode_step: Callable[..., Any]
+    prefill: Callable[..., Any]
     param_count: Callable[[Any], int]
     active_param_count: Callable[[Any], int]
 
@@ -117,12 +118,36 @@ def _mtp_forward(params, batch, h, cfg: ArchConfig):
 
 
 def decode_step(params, cache, tokens, pos, cfg: ArchConfig):
-    """tokens (B,) int32, pos scalar int32 -> (logits (B, V), cache)."""
+    """tokens (B,) int32 -> (logits (B, V), cache).
+
+    ``pos`` is a scalar int32 (wave batching: one shared position clock)
+    or a per-lane (B,) int32 vector (continuous batching: every cache lane
+    sits at its own position; the attention caches scatter per lane)."""
     x = constrain_batch(
         L.embed(params["embed"], tokens[:, None]).astype(cfg.adtype))
     x, cache = T.decode_stacks(params, cache, x, pos, cfg)
     x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
     return _lm_head(params, cfg, x)[:, 0], cache
+
+
+def prefill(params, tokens, cfg: ArchConfig, max_len: int):
+    """Prefill a prompt through the decode path in ONE dispatch.
+
+    tokens (B, P) int32 -> (last-position logits (B, V), cache).  A
+    ``lax.scan`` carries the growing cache over the P positions, so the
+    whole prompt lowers as one compiled program -- the continuous engine
+    jits this per (B, P, max_len) signature, prefilling a fresh batch-1
+    cache that :func:`repro.serve.cache.lane_insert` then writes into a
+    freed slot of the serving batch."""
+    plen = tokens.shape[1]
+    cache = T.init_cache(cfg, tokens.shape[0], max_len)
+
+    def step(carry, t):
+        logits, carry = decode_step(params, carry, tokens[:, t], t, cfg)
+        return carry, logits
+
+    cache, logits = jax.lax.scan(step, cache, jnp.arange(plen))
+    return logits[-1], cache
 
 
 def count_params(params) -> int:
@@ -243,6 +268,8 @@ def build_model(cfg: ArchConfig) -> Model:
         init_cache=lambda batch, max_len: T.init_cache(cfg, batch, max_len),
         decode_step=lambda params, cache, tok, pos: decode_step(
             params, cache, tok, pos, cfg),
+        prefill=lambda params, tokens, max_len: prefill(
+            params, tokens, cfg, max_len),
         param_count=count_params,
         active_param_count=lambda p: count_active_params(p, cfg),
     )

@@ -1,1 +1,5 @@
-from repro.serve.engine import Engine, Request
+from repro.serve.continuous import ContinuousEngine
+from repro.serve.engine import Engine
+from repro.serve.request import Request
+
+__all__ = ["ContinuousEngine", "Engine", "Request"]

@@ -1,0 +1,38 @@
+"""Slotted KV-cache ops for continuous batching.
+
+Every decode cache in every family -- GQA/MLA key-value caches, Mamba2
+SSM + conv states, RG-LRU recurrent + conv states -- is a pytree whose
+leaves are laid out ``(n_layers, batch, ...)``: batch is ALWAYS axis 1
+(see ``models.transformer.init_cache``).  A "lane" is therefore one index
+on axis 1 across every leaf, and slot surgery is a tree-map.
+
+Both ops take the lane index as a TRACED scalar, so one jitted program
+serves every slot -- admitting a request into lane 3 runs the same
+compiled insert as lane 0 (the tentpole requirement: lane insert resets
+exactly one lane's cache slice without recompiling).
+"""
+
+from __future__ import annotations
+
+import jax
+
+BATCH_AXIS = 1          # every cache leaf: (n_layers, batch, ...)
+
+
+def lane_insert(cache, src, lane):
+    """Write the batch-1 cache ``src`` (a freshly prefilled request) into
+    slot ``lane`` of the batched ``cache``.
+
+    Overwrites the lane's ENTIRE slice on every leaf -- positions beyond
+    the prompt come from ``src``'s zero-initialized tail -- so a recycled
+    lane needs no separate scrub: whatever the previous occupant left
+    behind is gone after one insert."""
+    return jax.tree.map(
+        lambda c, s: c.at[:, lane].set(s[:, 0].astype(c.dtype)), cache, src)
+
+
+def lane_reset(cache, lane):
+    """Zero slot ``lane``'s slice across every leaf (explicit scrub for a
+    freed lane; :func:`lane_insert` makes it redundant on reuse, but the
+    tests use it to prove a lane's slice is exactly the fresh state)."""
+    return jax.tree.map(lambda c: c.at[:, lane].set(0), cache)

@@ -1,0 +1,242 @@
+"""Continuous-batching engine: prefill -> insert-into-slot -> generate.
+
+Wave batching (:mod:`repro.serve.engine`) is the serving-side analogue of
+the zero-space waste the paper kills in the conv datapath: every decode
+step runs all ``max_batch`` lanes even after most finished, and a request
+arriving mid-wave waits for the wave boundary.  This engine keeps a
+SLOTTED KV cache with PER-LANE position clocks instead:
+
+* ``submit`` enqueues; admission happens the moment a lane frees -- the
+  request's prompt is prefilled in ONE scanned dispatch onto a fresh
+  batch-1 cache (``models.model.prefill``) and
+  :func:`repro.serve.cache.lane_insert` writes that cache into the freed
+  slot while the other lanes keep their state.
+* the decode step takes a per-lane ``(B,)`` position vector (the
+  ``models.attention`` per-lane path: rope angles, cache scatter and
+  causal masking all per lane), so lanes at wildly different depths share
+  one jitted program.
+* exactly three programs are compiled, once each: the prefill scan (per
+  prompt length), the lane insert, and the decode step -- admission never
+  recompiles anything, which is the tentpole contract.
+
+Failure domain: the ``serve.prefill`` / ``serve.decode`` fault sites
+(``repro.ft.inject``) fire per request / per lane.  A crashing prefill or
+decode lane finalizes THAT request with ``status="failed"`` and frees its
+slot -- the rest of the batch keeps serving.  The engine advances the
+injection step clock once per decode step, so ``@stepN`` rules target
+exact serving steps.
+
+The conv-bearing decode archs (Mamba2 / RecurrentGemma causal conv1d)
+ride the same path: their decode states are position-free, so only the
+slot surgery applies, and ``conv_policy`` carries over from the static
+engine unchanged.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.ft import inject
+from repro.models import model as M
+from repro.models import transformer as T
+from repro.serve import cache as C
+from repro.serve.request import Request
+from repro.serve.sampling import make_sampler
+
+__all__ = ["ContinuousEngine", "Request"]
+
+
+class ContinuousEngine:
+    #: introspection anchor for the benchmark's no-fallback gate: a driver
+    #: that silently handed the workload to the wave engine cannot fake
+    #: this together with the ``inserts`` counter.
+    engine_kind = "continuous"
+
+    def __init__(self, cfg: ArchConfig, params, max_batch: int = 4,
+                 max_len: int = 256, temperature: float = 0.0,
+                 pad_id: int = 0, seed: int = 0, conv_policy=None,
+                 clock=time.monotonic):
+        """Same surface as the static :class:`repro.serve.engine.Engine`
+        (``conv_policy`` pins the decode path's per-pass conv engines,
+        ``clock`` is the injectable deadline clock)."""
+        assert not cfg.is_encoder_only, "encoder-only archs do not decode"
+        if conv_policy is not None:
+            cfg = dataclasses.replace(cfg, conv_policy=str(conv_policy),
+                                      conv_mode=None)
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.temperature = temperature
+        self.pad_id = pad_id
+        self.queue: collections.deque[Request] = collections.deque()
+        self.key = jax.random.PRNGKey(seed)
+        self.clock = clock
+        # Slotted state: lane i of the batched cache belongs to lanes[i];
+        # lane_pos is the per-lane position clock (the NEXT cache slot the
+        # lane writes), next_tok the last sampled token to feed.
+        self.cache = T.init_cache(cfg, max_batch, max_len)
+        self.lanes: list[Request | None] = [None] * max_batch
+        self.lane_pos = np.zeros(max_batch, np.int32)
+        self.next_tok = np.full(max_batch, pad_id, np.int32)
+        self.counters = {"completed": 0, "timed_out": 0, "failed": 0,
+                         "admitted": 0, "inserts": 0, "decode_steps": 0}
+        #: phase accounting for the serving benchmark (same keys as the
+        #: static engine's ``stats``).
+        self.stats = {"prefill_s": 0.0, "decode_s": 0.0,
+                      "prefill_tokens": 0, "tokens": 0, "lane_steps": 0}
+        #: optional hook called after every decode step (the benchmark's
+        #: open-loop arrival driver submits new arrivals here).
+        self.on_step = None
+        self._decode = jax.jit(
+            lambda p, c, t, pos: M.decode_step(p, c, t, pos, cfg))
+        self._prefill = jax.jit(
+            lambda p, toks: M.prefill(p, toks, cfg, max_len))
+        self._insert = jax.jit(C.lane_insert)
+        self._sample = make_sampler(temperature)
+
+    # -- submission / finalization ------------------------------------------
+
+    def submit(self, req: Request):
+        req.t_submit = self.clock()
+        self.queue.append(req)
+
+    def _finalize(self, req: Request, status: str | None = None) -> None:
+        req.done = True
+        if status is not None:
+            req.status = status
+        req.t_done = self.clock()
+        key = req.status if req.status != "ok" else "completed"
+        self.counters[key] = self.counters.get(key, 0) + 1
+
+    def run_summary(self) -> dict:
+        return dict(self.counters)
+
+    def free_lanes(self) -> list[int]:
+        return [i for i, r in enumerate(self.lanes) if r is None]
+
+    def active_lanes(self) -> list[int]:
+        return [i for i, r in enumerate(self.lanes) if r is not None]
+
+    # -- admission: prefill -> insert-into-slot -----------------------------
+
+    def _sample_one(self, logits) -> int:
+        self.key, sub = jax.random.split(self.key)
+        return int(np.asarray(self._sample(logits, sub))[0])
+
+    def _admit(self, finished: list[Request]) -> None:
+        """Fill every free lane from the queue head.  Deadline-expired
+        queue entries are finalized at admission time (no decode step is
+        ever spent on them); a crashing prefill finalizes that request
+        with ``status="failed"`` and moves on."""
+        for lane in self.free_lanes():
+            while self.queue:
+                req = self.queue.popleft()
+                now = self.clock()
+                if (req.deadline_s is not None
+                        and now - req.t_submit > req.deadline_s):
+                    self._finalize(req, "timed_out")
+                    finished.append(req)
+                    continue
+                try:
+                    inject.fault_point("serve.prefill")
+                    t0 = time.perf_counter()
+                    logits, src = self._prefill(
+                        self.params,
+                        jnp.asarray([req.prompt], jnp.int32))
+                    jax.block_until_ready(logits)
+                    self.stats["prefill_s"] += time.perf_counter() - t0
+                except Exception:
+                    self._finalize(req, "failed")
+                    finished.append(req)
+                    continue
+                self.counters["admitted"] += 1
+                self.stats["prefill_tokens"] += len(req.prompt)
+                tok = self._sample_one(logits)
+                req.out.append(tok)
+                self.stats["tokens"] += 1
+                if len(req.out) >= req.max_new:
+                    # Single-token request: done straight out of prefill;
+                    # the lane stays free for the next queue entry.
+                    self._finalize(req)
+                    finished.append(req)
+                    continue
+                # The insert is part of the admission cost (prefill_s), not
+                # the decode rate: block here so its full-cache copy is not
+                # charged to the next decode step's timer.
+                t0 = time.perf_counter()
+                self.cache = self._insert(self.cache, src,
+                                          jnp.int32(lane))
+                jax.block_until_ready(self.cache)
+                self.stats["prefill_s"] += time.perf_counter() - t0
+                self.counters["inserts"] += 1
+                self.lanes[lane] = req
+                self.lane_pos[lane] = len(req.prompt)
+                self.next_tok[lane] = tok
+                break
+
+    # -- generate: one decode step over every occupied lane -----------------
+
+    def _release(self, lane: int, finished: list[Request],
+                 status: str | None = None) -> None:
+        self._finalize(self.lanes[lane], status)
+        finished.append(self.lanes[lane])
+        self.lanes[lane] = None
+
+    def step(self, finished: list[Request]) -> bool:
+        """One decode step across all occupied lanes (per-lane position
+        vector); samples on device, advances each lane's clock, finalizes
+        lanes that completed / timed out / failed.  Returns False when no
+        lane is occupied."""
+        active = self.active_lanes()
+        if not active:
+            return False
+        self.counters["decode_steps"] += 1
+        inject.set_step(self.counters["decode_steps"])
+        t0 = time.perf_counter()
+        logits, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(self.next_tok),
+            jnp.asarray(self.lane_pos))
+        jax.block_until_ready(logits)
+        self.stats["decode_s"] += time.perf_counter() - t0
+        self.key, sub = jax.random.split(self.key)
+        sampled = np.asarray(self._sample(logits, sub))
+        self.stats["lane_steps"] += len(active)
+        now = self.clock()
+        for i in active:
+            r = self.lanes[i]
+            try:
+                inject.fault_point("serve.decode")
+            except inject.InjectedFault:
+                self._release(i, finished, "failed")
+                continue
+            tok = int(sampled[i])
+            r.out.append(tok)
+            self.stats["tokens"] += 1
+            self.next_tok[i] = tok
+            self.lane_pos[i] += 1
+            if len(r.out) >= r.max_new or self.lane_pos[i] >= self.max_len:
+                self._release(i, finished)
+            elif (r.deadline_s is not None
+                    and now - r.t_submit > r.deadline_s):
+                self._release(i, finished, "timed_out")
+        if self.on_step is not None:
+            self.on_step(self)
+        return True
+
+    def run(self) -> list[Request]:
+        """Drain queue and lanes; returns finished requests.  Admission
+        runs before every decode step, so a request is inserted the
+        moment a lane frees -- never at a wave boundary."""
+        finished: list[Request] = []
+        while self.queue or self.active_lanes():
+            self._admit(finished)
+            self.step(finished)
+        return finished

@@ -6,15 +6,18 @@ path (uniform position clock -- cache layouts stay identical to the dry-run's
 ``serve_step``), then decoded greedily/sampled until every request finishes.
 New waves are admitted as the queue refills.
 
-This is deliberately the static-batching design: one positional clock per
-wave means no per-lane gather/scatter in the cache update, which is exactly
-the serve_step the production dry-run lowers.  (Continuous batching would
-vmap per-lane positions; measured here to cost an extra scatter per step and
-left as a documented extension.)
+This is the static-batching design: one positional clock per wave means no
+per-lane gather/scatter in the cache update, but every wave burns decode
+steps on finished and padded lanes and new requests wait at wave boundaries.
+:mod:`repro.serve.continuous` is the slotted-cache engine that retires that
+waste; this one stays as the lockstep baseline the serving benchmark
+(``benchmarks/bench_serve.py``) and the token-equivalence tests compare
+against.
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
 
@@ -25,22 +28,10 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.models import model as M
 from repro.models import transformer as T
+from repro.serve.request import Request
+from repro.serve.sampling import make_sampler
 
-
-@dataclasses.dataclass
-class Request:
-    rid: int
-    prompt: list[int]
-    max_new: int
-    out: list[int] = dataclasses.field(default_factory=list)
-    done: bool = False
-    #: wall-clock budget from ``submit()`` in seconds; ``None`` = no limit.
-    #: An overdue request is finalized with whatever tokens it has and
-    #: ``status="timed_out"`` -- a slow wave degrades THAT request, not the
-    #: whole batch.
-    deadline_s: float | None = None
-    status: str = "ok"
-    t_submit: float = 0.0
+__all__ = ["Engine", "Request"]
 
 
 class Engine:
@@ -65,16 +56,37 @@ class Engine:
         self.max_len = max_len
         self.temperature = temperature
         self.pad_id = pad_id
-        self.queue: list[Request] = []
+        self.queue: collections.deque[Request] = collections.deque()
         self.key = jax.random.PRNGKey(seed)
         self.clock = clock
-        self.counters = {"completed": 0, "timed_out": 0, "waves": 0}
+        self.counters = {"completed": 0, "timed_out": 0, "waves": 0,
+                         "decode_steps": 0}
+        #: wall-clock phase accounting for the serving benchmark:
+        #: prefill/decode seconds, prompt tokens prefilled, generated
+        #: tokens, and lane_steps = sum over decode steps of lanes that
+        #: were still generating (lane_steps / (decode_steps * max_batch)
+        #: is the wave engine's occupancy -- the waste continuous
+        #: batching removes).
+        self.stats = {"prefill_s": 0.0, "decode_s": 0.0,
+                      "prefill_tokens": 0, "tokens": 0, "lane_steps": 0}
+        #: optional hook called after every decode step (the benchmark's
+        #: open-loop arrival driver submits mid-wave arrivals here).
+        self.on_step = None
         self._decode = jax.jit(
             lambda p, c, t, pos: M.decode_step(p, c, t, pos, cfg))
+        self._sample = make_sampler(temperature)
 
     def submit(self, req: Request):
         req.t_submit = self.clock()
         self.queue.append(req)
+
+    def _finalize(self, req: Request, status: str | None = None) -> None:
+        req.done = True
+        if status is not None:
+            req.status = status
+        req.t_done = self.clock()
+        key = req.status if req.status != "ok" else "completed"
+        self.counters[key] = self.counters.get(key, 0) + 1
 
     def _expire(self, wave: list[Request]) -> None:
         """Finalize overdue requests: keep the tokens generated so far,
@@ -83,18 +95,19 @@ class Engine:
         for r in wave:
             if (not r.done and r.deadline_s is not None
                     and now - r.t_submit > r.deadline_s):
-                r.done = True
-                r.status = "timed_out"
-                self.counters["timed_out"] += 1
+                self._finalize(r, "timed_out")
 
     def run_summary(self) -> dict:
         """Counters of the engine's lifetime: completed / timed_out
-        requests and waves run."""
+        requests, waves run and decode steps executed."""
         return dict(self.counters)
+
+    def _tick(self) -> None:
+        if self.on_step is not None:
+            self.on_step(self)
 
     def _run_wave(self, wave: list[Request]) -> None:
         self.counters["waves"] += 1
-        self._expire(wave)            # queue wait may already be overdue
         b = self.max_batch
         plen = max(len(r.prompt) for r in wave)
         toks = np.full((b, plen), self.pad_id, np.int32)
@@ -103,52 +116,80 @@ class Engine:
         cache = T.init_cache(self.cfg, b, self.max_len)
         # Lockstep prefill through the decode path.
         logits = None
+        t0 = time.perf_counter()
         for t in range(plen):
             if all(r.done for r in wave):
                 break
             logits, cache = self._decode(self.params, cache,
                                          jnp.asarray(toks[:, t]),
                                          jnp.int32(t))
+            self._tick()
+        if logits is not None:
+            jax.block_until_ready(logits)
+        self.stats["prefill_s"] += time.perf_counter() - t0
+        self.stats["prefill_tokens"] += sum(len(r.prompt) for r in wave)
         pos = plen
         max_new = max(r.max_new for r in wave)
         self._expire(wave)
         for _ in range(min(max_new, self.max_len - plen)):
             if logits is None or all(r.done for r in wave):
                 break
-            lg = np.asarray(logits, np.float32)
-            nxt = np.zeros(b, np.int32)
+            # Sample ON DEVICE (greedy argmax / batched categorical) and
+            # transfer only the B token ids, not the (B, V) logits.
+            self.key, sub = jax.random.split(self.key)
+            sampled = np.asarray(self._sample(logits, sub))
+            nxt = np.full(b, self.pad_id, np.int32)
+            active = 0
             for i, r in enumerate(wave):
                 if r.done:
-                    nxt[i] = self.pad_id
                     continue
-                if self.temperature > 0:
-                    self.key, sub = jax.random.split(self.key)
-                    tok = int(jax.random.categorical(
-                        sub, jnp.asarray(lg[i]) / self.temperature))
-                else:
-                    tok = int(lg[i].argmax())
+                active += 1
+                tok = int(sampled[i])
                 r.out.append(tok)
                 nxt[i] = tok
                 if len(r.out) >= r.max_new:
-                    r.done = True
+                    self._finalize(r)
+            self.stats["tokens"] += active
+            self.stats["lane_steps"] += active
             self._expire(wave)        # deadline checked after every token
             if all(r.done for r in wave):
                 break
+            t0 = time.perf_counter()
             logits, cache = self._decode(self.params, cache,
                                          jnp.asarray(nxt), jnp.int32(pos))
+            jax.block_until_ready(logits)
+            self.stats["decode_s"] += time.perf_counter() - t0
+            self.counters["decode_steps"] += 1
+            self._tick()
             pos += 1
         for r in wave:
             if not r.done:
-                r.done = True
-            if r.status == "ok":
-                self.counters["completed"] += 1
+                self._finalize(r)
+
+    def _admit_wave(self) -> tuple[list[Request], list[Request]]:
+        """Pop the next wave off the queue; requests whose deadline
+        already expired while queued are finalized HERE (admission-time
+        expiry) and never burn a decode step."""
+        wave: list[Request] = []
+        expired: list[Request] = []
+        now = self.clock()
+        while self.queue and len(wave) < self.max_batch:
+            r = self.queue.popleft()
+            if (r.deadline_s is not None
+                    and now - r.t_submit > r.deadline_s):
+                self._finalize(r, "timed_out")
+                expired.append(r)
+                continue
+            wave.append(r)
+        return wave, expired
 
     def run(self) -> list[Request]:
         """Drain the queue; returns finished requests."""
         finished: list[Request] = []
         while self.queue:
-            wave = [self.queue.pop(0)
-                    for _ in range(min(self.max_batch, len(self.queue)))]
-            self._run_wave(wave)
-            finished.extend(wave)
+            wave, expired = self._admit_wave()
+            finished.extend(expired)
+            if wave:
+                self._run_wave(wave)
+                finished.extend(wave)
         return finished

@@ -1,0 +1,40 @@
+"""The serving request record shared by both engines.
+
+A request's lifecycle is submit -> (queue wait) -> prefill -> decode ->
+finalize.  ``status`` records how it ended:
+
+``"ok"``         completed with ``len(out) == max_new`` (or hit the
+                 engine's ``max_len`` ceiling with partial output)
+``"timed_out"``  its ``deadline_s`` wall-clock budget expired -- at
+                 admission time (never decoded) or mid-stream (keeps the
+                 tokens generated so far)
+``"failed"``     its prefill or its decode lane crashed (e.g. an armed
+                 ``serve.prefill`` / ``serve.decode`` fault) -- the
+                 request is finalized with partial output instead of the
+                 crash killing the whole batch
+
+``t_submit`` / ``t_done`` are engine-clock stamps (injectable clock, see
+the engines), so ``t_done - t_submit`` is the request latency the serving
+benchmark aggregates into p50/p99.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list[int]
+    max_new: int
+    out: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+    #: wall-clock budget from ``submit()`` in seconds; ``None`` = no limit.
+    #: An overdue request is finalized with whatever tokens it has and
+    #: ``status="timed_out"`` -- a slow batch degrades THAT request, not
+    #: the whole batch.
+    deadline_s: float | None = None
+    status: str = "ok"
+    t_submit: float = 0.0
+    t_done: float | None = None

@@ -1,0 +1,32 @@
+"""On-device token sampling for the serving engines.
+
+Per-token sampling used to round-trip the full (B, V) logits to host and
+loop over lanes in Python; the samplers here run argmax / categorical ON
+DEVICE so the host transfer per step is B token ids.  Greedy (temperature
+0) is a plain argmax -- deterministic, the engines' token-equivalence
+tests anchor on it.  Temperature sampling draws one batched categorical
+per step (independent Gumbel noise per lane from a single key).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def make_sampler(temperature: float):
+    """jitted ``(logits (B, V), key) -> token ids (B,) int32``."""
+    if temperature <= 0:
+        @jax.jit
+        def sample(logits, key):
+            del key
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    else:
+        t = float(temperature)
+
+        @jax.jit
+        def sample(logits, key):
+            return jax.random.categorical(
+                key, logits.astype(jnp.float32) / t, axis=-1
+            ).astype(jnp.int32)
+    return sample

@@ -1,0 +1,268 @@
+"""Continuous-batching engine: token equivalence with the static engine,
+slot recycling with clean cache slices, deadline expiry under a fake
+clock, per-lane crash isolation via the serve.* fault sites, and the
+per-lane position vector path at the models level.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.config import config
+from repro.ft import inject
+from repro.models import build_model
+from repro.models import model as M
+from repro.serve import cache as SC
+from repro.serve.continuous import ContinuousEngine
+from repro.serve.engine import Engine
+from repro.serve.request import Request
+
+
+def _setup(arch="smollm_360m"):
+    cfg = get_smoke_config(arch)
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _requests(cfg, n, plen=5, max_new=6, seed=0):
+    rng = np.random.RandomState(seed)
+    return [Request(rid=i, prompt=rng.randint(1, cfg.vocab, plen).tolist(),
+                    max_new=max_new) for i in range(n)]
+
+
+class _Clock:
+    """Fake wall clock: +1s per read, so every deadline comparison is
+    deterministic regardless of real scheduling."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        self.t += 1.0
+        return self.t
+
+
+# ---------------------------------------------------------------------------
+# Token equivalence: continuous == static (greedy) per request
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["smollm_360m", "mamba2_370m",
+                                  "recurrentgemma_9b"])
+def test_continuous_matches_static_greedy(arch):
+    """Equal-length prompts (the static engine's left-padding is a no-op)
+    through both engines: greedy outputs must be token-identical per
+    request.  5 requests on 2 lanes forces slot recycling on the way."""
+    cfg, params = _setup(arch)
+    reqs = _requests(cfg, 5)
+
+    def run(engine_cls):
+        eng = engine_cls(cfg, params, max_batch=2, max_len=24)
+        for r in _requests(cfg, 5):
+            eng.submit(r)
+        return {r.rid: r.out for r in eng.run()}
+
+    static, cont = run(Engine), run(ContinuousEngine)
+    assert set(static) == set(cont) == {r.rid for r in reqs}
+    assert static == cont
+
+
+def test_continuous_varied_prompt_lengths_match_solo():
+    """Prompts of different lengths share lanes; each request's greedy
+    output must equal its solo run (padding-free prefill + per-lane
+    positions keep lanes independent)."""
+    cfg, params = _setup()
+    rng = np.random.RandomState(1)
+    prompts = [rng.randint(1, cfg.vocab, n).tolist() for n in (3, 7, 5, 4)]
+
+    solo = {}
+    for i, p in enumerate(prompts):
+        eng = Engine(cfg, params, max_batch=1, max_len=24)
+        eng.submit(Request(rid=i, prompt=p, max_new=6))
+        solo[i] = eng.run()[0].out
+
+    eng = ContinuousEngine(cfg, params, max_batch=2, max_len=24)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=p, max_new=6))
+    cont = {r.rid: r.out for r in eng.run()}
+    assert cont == solo
+
+
+# ---------------------------------------------------------------------------
+# Slot recycling: a freed lane is reused with a clean cache slice
+# ---------------------------------------------------------------------------
+
+def test_slot_recycling_clean_cache_slice():
+    """3 requests on ONE lane: every request decodes on a lane that just
+    held a different request's cache.  Outputs equal to each solo run
+    prove the lane insert fully overwrites the recycled slice."""
+    cfg, params = _setup()
+    reqs = _requests(cfg, 3, plen=6, max_new=5, seed=2)
+
+    solo = {}
+    for r in _requests(cfg, 3, plen=6, max_new=5, seed=2):
+        eng = Engine(cfg, params, max_batch=1, max_len=24)
+        eng.submit(r)
+        solo[r.rid] = eng.run()[0].out
+
+    eng = ContinuousEngine(cfg, params, max_batch=1, max_len=24)
+    for r in reqs:
+        eng.submit(r)
+    done = {r.rid: r.out for r in eng.run()}
+    assert done == solo
+    assert eng.counters["inserts"] == 3
+    assert eng.free_lanes() == [0]          # no lane leaked
+
+
+def test_lane_reset_zeroes_one_lane():
+    cfg, _ = _setup()
+    from repro.models import transformer as T
+    cache = jax.tree.map(lambda c: jnp.ones_like(c),
+                         T.init_cache(cfg, 3, 8))
+    reset = SC.lane_reset(cache, jnp.int32(1))
+    for leaf in jax.tree.leaves(reset):
+        assert float(jnp.abs(leaf[:, 1]).sum()) == 0.0
+        assert float(jnp.abs(leaf[:, 0]).sum()) > 0.0
+        assert float(jnp.abs(leaf[:, 2]).sum()) > 0.0
+
+
+# ---------------------------------------------------------------------------
+# Deadlines under a fake clock
+# ---------------------------------------------------------------------------
+
+def test_continuous_deadline_expires_queued_request_at_admission():
+    """A request whose deadline lapses while QUEUED is finalized at
+    admission time -- zero decode steps are spent on it."""
+    cfg, params = _setup()
+    eng = ContinuousEngine(cfg, params, max_batch=1, max_len=24,
+                           clock=_Clock())
+    eng.submit(Request(rid=0, prompt=[1, 2, 3], max_new=6))
+    eng.submit(Request(rid=1, prompt=[1, 2, 3], max_new=6,
+                       deadline_s=0.5))
+    done = {r.rid: r for r in eng.run()}
+    assert done[0].status == "ok" and len(done[0].out) == 6
+    assert done[1].status == "timed_out"
+    assert done[1].out == []                # never admitted, never decoded
+    assert eng.counters["timed_out"] == 1
+    assert eng.counters["admitted"] == 1
+
+
+def test_continuous_deadline_expires_mid_stream():
+    """An admitted request whose deadline lapses mid-generation keeps its
+    partial output and frees the lane."""
+    cfg, params = _setup()
+    eng = ContinuousEngine(cfg, params, max_batch=1, max_len=40,
+                           clock=_Clock())
+    eng.submit(Request(rid=0, prompt=[1, 2, 3], max_new=30,
+                       deadline_s=5.0))
+    r = eng.run()[0]
+    assert r.status == "timed_out"
+    assert 0 < len(r.out) < 30              # partial output kept
+    assert eng.free_lanes() == [0]
+
+
+# ---------------------------------------------------------------------------
+# Failure domain: serve.prefill / serve.decode fault sites
+# ---------------------------------------------------------------------------
+
+def test_prefill_fault_fails_request_not_engine():
+    cfg, params = _setup()
+    saved = config.snapshot()
+    try:
+        config.update(fault_spec="serve.prefill:raise")
+        eng = ContinuousEngine(cfg, params, max_batch=2, max_len=24)
+        eng.submit(Request(rid=0, prompt=[1, 2, 3], max_new=4))
+        done = eng.run()
+        assert [r.status for r in done] == ["failed"]
+        assert done[0].out == []
+        assert eng.counters["failed"] == 1
+        assert eng.free_lanes() == [0, 1]   # no lane leaked
+    finally:
+        config.update(**saved)
+    # Disarmed again: the same engine instance serves cleanly.
+    eng.submit(Request(rid=1, prompt=[1, 2, 3], max_new=4))
+    r = eng.run()[0]
+    assert r.status == "ok" and len(r.out) == 4
+
+
+def test_decode_fault_finalizes_lane_batch_survives():
+    """A decode-step crash on one lane finalizes THAT request with
+    status="failed"; requests that finished earlier and requests admitted
+    later complete normally."""
+    cfg, params = _setup()
+    saved = config.snapshot()
+    try:
+        config.update(fault_spec="serve.decode:raise@step4")
+        eng = ContinuousEngine(cfg, params, max_batch=2, max_len=24)
+        # rid 0 finishes (1 prefill + 1 decode token) before step 4;
+        # rid 1 is the only lane alive at step 4 and crashes there.
+        eng.submit(Request(rid=0, prompt=[1, 2, 3], max_new=2))
+        eng.submit(Request(rid=1, prompt=[1, 2, 3, 4], max_new=10))
+        done = {r.rid: r for r in eng.run()}
+        assert done[0].status == "ok" and len(done[0].out) == 2
+        assert done[1].status == "failed"
+        assert 0 < len(done[1].out) < 10    # partial output kept
+        assert eng.free_lanes() == [0, 1]
+        # The lane is reusable after the crash (the step clock has moved
+        # past the armed step, so the new request serves cleanly).
+        eng.submit(Request(rid=2, prompt=[5, 6, 7], max_new=3))
+        r = eng.run()[0]
+        assert r.status == "ok" and len(r.out) == 3
+    finally:
+        config.update(**saved)
+    assert inject.armed_rules() == ()
+
+
+# ---------------------------------------------------------------------------
+# Per-lane position vector path at the models level
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["smollm_360m", "deepseek_v3_671b"])
+def test_vector_pos_decode_matches_scalar(arch):
+    """lane_insert + a (B,) position vector must reproduce each lane's
+    scalar-pos batch-1 decode exactly: per-lane rope angles, cache
+    scatter and causal masking all line up."""
+    cfg, params = _setup(arch)
+    max_len = 16
+    rng = np.random.RandomState(3)
+    prompts = [rng.randint(1, cfg.vocab, n).tolist() for n in (3, 6, 4)]
+    b = len(prompts)
+
+    from repro.models import transformer as T
+    batch_cache = T.init_cache(cfg, b, max_len)
+    solo_logits, next_toks = [], []
+    for lane, p in enumerate(prompts):
+        logits, src = M.prefill(params, jnp.asarray([p], jnp.int32),
+                                cfg, max_len)
+        batch_cache = SC.lane_insert(batch_cache, src, jnp.int32(lane))
+        tok = int(jnp.argmax(logits[0]))
+        next_toks.append(tok)
+        # Reference: one scalar-pos decode step on the solo cache.
+        ref, _ = M.decode_step(params, src, jnp.asarray([tok], jnp.int32),
+                               jnp.int32(len(p)), cfg)
+        solo_logits.append(np.asarray(ref[0], np.float32))
+
+    pos = jnp.asarray([len(p) for p in prompts], jnp.int32)
+    logits, _ = M.decode_step(params, batch_cache,
+                              jnp.asarray(next_toks, jnp.int32), pos, cfg)
+    for lane in range(b):
+        np.testing.assert_allclose(np.asarray(logits[lane], np.float32),
+                                   solo_logits[lane], rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# Policy'd conv decode archs ride the continuous path
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["mamba2_370m", "recurrentgemma_9b"])
+def test_conv_policy_threads_through_continuous(arch):
+    cfg, params = _setup(arch)
+    eng = ContinuousEngine(cfg, params, max_batch=2, max_len=24,
+                           conv_policy="bp_phase")
+    assert eng.cfg.conv_policy == "bp_phase"
+    for r in _requests(cfg, 3, max_new=5, seed=4):
+        eng.submit(r)
+    done = eng.run()
+    assert len(done) == 3
+    assert all(r.status == "ok" and len(r.out) == 5 for r in done)

@@ -488,6 +488,17 @@ def test_all_known_sites_are_exercised(tmp_path):
         params, opt, good, _ = _toy_setup()
         TS.make_train_step(_ToyCfg(), adamw.AdamWConfig(),
                            loss=_toy_loss, guard=True)(params, opt, good, 0)
+        # serve.prefill + serve.decode (continuous engine, one request):
+        from repro.configs import get_smoke_config
+        from repro.models import model as M
+        from repro.serve.continuous import ContinuousEngine
+        from repro.serve.request import Request as ServeRequest
+        scfg = get_smoke_config("smollm_360m")
+        eng = ContinuousEngine(
+            scfg, M.build_model(scfg).init(jax.random.PRNGKey(0)),
+            max_batch=1, max_len=8)
+        eng.submit(ServeRequest(rid=0, prompt=[1, 2], max_new=2))
+        eng.run()
         missing = set(inject.KNOWN_SITES) - inject.seen_sites()
         assert not missing, f"registered but never exercised: {missing}"
     finally:
@@ -524,4 +535,6 @@ def test_serve_deadline_times_out_single_request():
     assert len(done[0].out) < 6            # kept partial output
     assert done[1].status == "ok" and len(done[1].out) == 6
     summary = eng.run_summary()
-    assert summary == {"completed": 1, "timed_out": 1, "waves": 1}
+    assert summary["completed"] == 1
+    assert summary["timed_out"] == 1
+    assert summary["waves"] == 1
