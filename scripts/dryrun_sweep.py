@@ -29,12 +29,15 @@ def cell_cost(arch, shape):
     return cfg.n_layers * (2 if cfg.n_experts else 1)
 
 
-def run(arch, shape, multi_pod, unroll, timeout):
+def run(arch, shape, multi_pod, unroll, timeout, conv=None):
     env = dict(os.environ)
     env["REPRO_SCAN_UNROLL"] = str(unroll)
     env["PYTHONPATH"] = os.path.join(ROOT, "src")
-    cmd = [sys.executable, "-m", "repro.launch.dryrun",
-           "--arch", arch, "--shape", shape]
+    if conv:
+        cmd = [sys.executable, "-m", "repro.launch.dryrun", "--conv", conv]
+    else:
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", arch, "--shape", shape]
     if multi_pod:
         cmd.append("--multi-pod")
     t0 = time.time()
@@ -55,7 +58,28 @@ def main():
     ap.add_argument("--timeout", type=int, default=2400)
     ap.add_argument("--only-arch", default=None)
     ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--conv-only", action="store_true",
+                    help="run only the mesh-parallel conv cells "
+                         "(tp / dp_only / spatial autoencoder compiles "
+                         "with the sharded-path gate)")
     args = ap.parse_args()
+
+    if args.conv_only:
+        failures = []
+        for pol in ("tp", "dp_only", "spatial"):
+            print(f"=== conv cell {pol} (multi_pod={args.multi_pod})",
+                  flush=True)
+            ok, dt, tail = run(None, None, args.multi_pod, args.unroll,
+                               args.timeout, conv=pol)
+            status = "OK" if ok else "FAIL"
+            print(f"    {status} {dt:.0f}s :: " + " | ".join(tail),
+                  flush=True)
+            if not ok:
+                failures.append(pol)
+        if failures:
+            raise SystemExit(f"conv dry-run failures: {failures}")
+        print("=== conv sweep done: 3/3 OK", flush=True)
+        return
 
     cells = []
     for a in all_arch_ids():

@@ -395,6 +395,25 @@ def _weight_for(eng: Engine, w: jax.Array, spec: ConvSpec) -> jax.Array:
 #: (pass, engine-actually-used) trace-time counters, key "pass:engine".
 DISPATCH_EVENTS: dict[str, int] = {}
 
+#: mesh-parallel lowering hook, installed by
+#: ``repro.dist.conv_parallel.conv_mesh``.  Called as ``hook(x, w, spec,
+#: policy)`` with the NCHW-normalized spec (ConvSpec or ConvTransposeSpec);
+#: returns the sharded result or ``NotImplemented`` to decline, in which
+#: case the single-device custom_vjp proceeds unchanged.  A mesh-aware
+#: RESOLUTION step, not an engine: inside the sharded lowering every local
+#: pass still dispatches through ``resolve_engine``/``_execute``.
+MESH_LOWERING = None
+
+
+def _mesh_dispatch(fn, x, w, spec, policy):
+    """Offer one conv call to the mesh hook before the single-device vjp."""
+    hook = MESH_LOWERING
+    if hook is not None:
+        out = hook(x, w, spec, policy)
+        if out is not NotImplemented:
+            return out
+    return fn(x, w, spec, policy)
+
 #: per-decision log: requested engine, engine used, and why (bounded).
 POLICY_DECISIONS: list[dict] = []
 _MAX_DECISIONS = 512
@@ -964,10 +983,10 @@ def conv2d_transpose(x: jax.Array, w: jax.Array, *args, **kwargs) \
     spec, policy = _canon_transpose_call(args, kwargs)
     policy = _validate_policy(effective_policy(policy))
     if spec.layout == "NHWC":
-        y = _conv2d_transpose(jnp.transpose(x, (0, 3, 1, 2)), w,
-                              spec.with_layout("NCHW"), policy)
+        y = _mesh_dispatch(_conv2d_transpose, jnp.transpose(x, (0, 3, 1, 2)),
+                           w, spec.with_layout("NCHW"), policy)
         return jnp.transpose(y, (0, 2, 3, 1))
-    return _conv2d_transpose(x, w, spec, policy)
+    return _mesh_dispatch(_conv2d_transpose, x, w, spec, policy)
 
 
 # ---------------------------------------------------------------------------
@@ -1063,10 +1082,10 @@ def conv2d(x: jax.Array, w: jax.Array, *args, **kwargs) -> jax.Array:
     spec, policy = _canon_call(args, kwargs)
     policy = _validate_policy(effective_policy(policy))
     if spec.layout == "NHWC":
-        y = _conv2d(jnp.transpose(x, (0, 3, 1, 2)), w,
-                    spec.with_layout("NCHW"), policy)
+        y = _mesh_dispatch(_conv2d, jnp.transpose(x, (0, 3, 1, 2)), w,
+                           spec.with_layout("NCHW"), policy)
         return jnp.transpose(y, (0, 2, 3, 1))
-    return _conv2d(x, w, spec, policy)
+    return _mesh_dispatch(_conv2d, x, w, spec, policy)
 
 
 # ---------------------------------------------------------------------------

@@ -1,6 +1,10 @@
-"""Distributed substrate: sharding rules and activation constraints."""
+"""Distributed substrate: sharding rules, activation constraints, and
+mesh-parallel conv lowerings."""
 
 from repro.dist import sharding
+from repro.dist import conv_parallel
 from repro.dist.constraints import constrain_batch, set_activation_policy
+from repro.dist.conv_parallel import ConvParallel, conv_mesh
 
-__all__ = ["sharding", "constrain_batch", "set_activation_policy"]
+__all__ = ["sharding", "conv_parallel", "constrain_batch",
+           "set_activation_policy", "ConvParallel", "conv_mesh"]

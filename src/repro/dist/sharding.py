@@ -76,6 +76,19 @@ def _leaf_spec(path: tuple[str, ...], leaf, mesh, policy: str) -> P:
         if policy == "dp_only":
             spec = [s if s != "model" else None for s in spec]
         return P(*lead, *spec)
+    elif ndim >= 4:
+        # Conv kernel ``(..., O, I, kh, kw)`` -- or its transposed twin
+        # ``(..., I, O/g, kh, kw)`` under a decoder ("dec") path.  The
+        # trailing dims are SPATIAL: a kh x kw kernel is never a matmul,
+        # even when kh/kw happen to divide the mesh, so the linear-weight
+        # rule must not see it.  Shard Cout over "model" (the conv
+        # analogue of d_out="model"; matches conv_parallel's "tp" psum
+        # placement) and replicate Cin -- "data" is taken by the batch.
+        out_dim = ndim - 3 if "dec" in path else ndim - 4
+        spec = [None] * ndim
+        if policy != "dp_only":
+            spec[out_dim] = _fit(leaf.shape[out_dim], mesh, "model")
+        return P(*spec)
     elif "wo" in path:
         d_in, d_out = "model", "data"        # output proj: swapped axes
     else:
@@ -92,6 +105,11 @@ def param_specs(params, mesh, policy: str = "tp"):
     def walk(tree, path):
         if isinstance(tree, dict):
             return {k: walk(v, path + (k,)) for k, v in tree.items()}
+        if isinstance(tree, (list, tuple)):
+            # Per-stage conv stacks ({"enc": [layer, ...]}) keep their
+            # container type so the spec tree mirrors the param tree.
+            out = [walk(v, path + (str(i),)) for i, v in enumerate(tree)]
+            return tuple(out) if isinstance(tree, tuple) else out
         return _leaf_spec(path, tree, mesh, policy)
     return walk(params, ())
 

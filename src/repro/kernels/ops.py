@@ -492,6 +492,46 @@ def _input_grad_plan(d: ConvDims, budget: int) -> PhasePlan | None:
 PLAN_ROLES = ("forward", "weight_grad", "input_grad")
 
 
+# ---------------------------------------------------------------------------
+# Halo export for mesh-parallel spatial sharding (repro.dist.conv_parallel)
+# ---------------------------------------------------------------------------
+
+def tap_span(d: ConvDims) -> tuple[int, int]:
+    """Per-axis extent of the KEPT (real) kernel taps.
+
+    Recovered from the same tap table the tile planners dispatch with
+    (:func:`_forward_taps`): a tap ``(plane, du, dv)`` sits at effective
+    kernel position ``(du*s_h + plane//s_w, dv*s_w + plane%s_w)``.  Zero
+    taps dropped at plan time (dilation) never enter the table, so the
+    span is the real footprint -- the quantity a spatial halo exchange
+    must cover, with no zero-space counted."""
+    taps = _forward_taps(_canonical(d))
+    span_h = 1 + max(du * d.s_h + p // d.s_w for p, du, dv in taps)
+    span_w = 1 + max(dv * d.s_w + p % d.s_w for p, du, dv in taps)
+    return span_h, span_w
+
+
+def shard_halo(d: ConvDims) -> tuple[tuple[int, int], tuple[int, int]]:
+    """Per-axis ``((lo_h, hi_h), (lo_w, hi_w))`` halo rows/cols a spatial
+    shard must exchange with its neighbors, in INPUT-plane units.
+
+    Adjacent stride windows overlap by exactly ``span - stride`` rows
+    (window ``o`` ends at ``o*s - P + span - 1``; window ``o+1`` starts at
+    ``(o+1)*s - P``), so that is the total exchanged per boundary -- the
+    tap-table counterpart of the planners' per-tile ``halo_h``/``halo_w``
+    (:func:`_taps_halo` measures the same kept taps in phase-split rows).
+    The split puts the low padding on the low side: an edge shard's
+    ``ppermute`` then receives exactly the zero rows the global padding
+    would have provided, and no zero-space ever crosses the wire.  A
+    negative ``hi`` means adjacent windows do not even touch the last
+    ``-hi`` local rows (e.g. 1x1 stride-2): the shard crops instead of
+    exchanging."""
+    d = _canonical(d)
+    span_h, span_w = tap_span(d)
+    return ((d.P_h, span_h - d.s_h - d.P_h),
+            (d.P_w, span_w - d.s_w - d.P_w))
+
+
 def plan_candidates(role: str, d: ConvDims, budget: int | None = None,
                     k: int | None = None):
     """The autotuner's shortlist: up to ``k`` analytically FITTING plans in

@@ -304,6 +304,111 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     return result
 
 
+def run_conv_cell(policy: str = "tp", multi_pod: bool = False,
+                  report_dir: str = REPORT_DIR, tag: str = "") -> dict:
+    """Compile the mesh-parallel conv autoencoder train step on the
+    production mesh and GATE that the sharded lowering was actually taken.
+
+    ``policy`` is a ``repro.dist.conv_parallel`` policy name: ``tp``
+    (batch over "data", Cout over "model"), ``dp_only`` (pure data
+    parallelism) or ``spatial`` (batch over "data", H over "model" with
+    halo exchange -- the cell then must emit collective-permutes).  Convs
+    the mesh cannot shard (e.g. the final decoder's Cout=3 under tp) fall
+    back per-role; the recorded reasons land in the report.
+    """
+    from repro.core import conv as CONV
+    from repro.dist.constraints import set_activation_policy
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "x".join(str(s) for s in mesh.devices.shape)
+    # Spatial policy replicates params (activation sharding is the point);
+    # tp/dp_only reuse the matching param rules.
+    param_policy = "tp_rep" if policy == "spatial" else policy
+    set_activation_policy(SH.batch_axes(mesh, param_policy))
+    acfg = M.AutoencoderConfig(c_in=3, widths=(16, 32), k=3,
+                               conv_policy="lax")
+    # Batch must divide the full batch-axis extent (dp_only: every axis).
+    n_batch = 1
+    for a in SH.batch_axes(mesh, param_policy):
+        n_batch *= dict(mesh.shape)[a]
+    b, size = 2 * n_batch, 64
+    p_struct = jax.eval_shape(partial(M.init_autoencoder, cfg=acfg),
+                              jax.random.PRNGKey(0))
+    p_shard = SH.to_shardings(SH.param_specs(p_struct, mesh, param_policy),
+                              mesh)
+    o_struct = jax.eval_shape(adamw.init_state, p_struct)
+    o_shard = SH.to_shardings(SH.opt_state_specs(p_struct, mesh,
+                                                 param_policy), mesh)
+    batch = {"image": jax.ShapeDtypeStruct((b, acfg.c_in, size, size),
+                                           jnp.float32)}
+    b_shard = SH.to_shardings(SH.batch_specs(batch, mesh, param_policy),
+                              mesh)
+    step_fn = TS.make_train_step(acfg, adamw.AdamWConfig(),
+                                 loss=M.autoencoder_loss, conv_mesh=policy)
+    CONV.reset_dispatch_events()
+    t0 = time.time()
+    with mesh:
+        jitted = jax.jit(step_fn,
+                         in_shardings=(p_shard, o_shard, b_shard,
+                                       SH.to_shardings(
+                                           jax.sharding.PartitionSpec(),
+                                           mesh)),
+                         out_shardings=(p_shard, o_shard, None))
+        compiled = jitted.lower(
+            p_struct, o_struct, batch,
+            jax.ShapeDtypeStruct((), jnp.int32)).compile()
+    t1 = time.time()
+    events = {k: v for k, v in CONV.dispatch_events().items()
+              if k.startswith("mesh:")}
+    sharded = sum(v for k, v in events.items()
+                  if k.startswith("mesh:conv2d"))
+    fallbacks = [p["reason"] for p in CONV.policy_decisions()
+                 if p["pass"] == "mesh"]
+    n_dev = mesh.devices.size
+    cbytes = collective_bytes(compiled.as_text(), n_dev)
+    mem = compiled.memory_analysis()
+    if sharded == 0:
+        raise SystemExit(
+            f"[dryrun] conv cell policy={policy}: NO conv took the sharded "
+            f"path (silent replication); events={events} "
+            f"reasons={fallbacks}")
+    if policy == "spatial" and cbytes["collective-permute"] == 0:
+        raise SystemExit(
+            f"[dryrun] conv cell policy=spatial compiled without any "
+            f"collective-permute: halo exchange was optimized away or "
+            f"never emitted; events={events}")
+    result = {
+        "arch": acfg.name,
+        "shape": f"ae_train_{size}",
+        "mesh": mesh_name,
+        "policy": policy,
+        "n_devices": n_dev,
+        "kind": "train",
+        "compile_s": round(t1 - t0, 2),
+        "mesh_events": events,
+        "sharded_convs": sharded,
+        "fallback_reasons": fallbacks,
+        "collective_bytes": cbytes,
+        "memory": {
+            "argument_size_in_bytes": getattr(mem, "argument_size_in_bytes",
+                                              None),
+            "output_size_in_bytes": getattr(mem, "output_size_in_bytes",
+                                            None),
+            "temp_size_in_bytes": getattr(mem, "temp_size_in_bytes", None),
+        },
+    }
+    os.makedirs(report_dir, exist_ok=True)
+    suffix = f"__{tag}" if tag else ""
+    out_path = os.path.join(
+        report_dir, f"{acfg.name}__conv_{policy}__{mesh_name}{suffix}.json")
+    with open(out_path, "w") as f:
+        json.dump(result, f, indent=2)
+    print(f"[dryrun] conv cell policy={policy} mesh={mesh_name} "
+          f"compile={result['compile_s']}s sharded_convs={sharded} "
+          f"permute={cbytes['collective-permute']:.3e}B "
+          f"events={events}")
+    return result
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
@@ -313,10 +418,20 @@ def main():
     ap.add_argument("--report-dir", default=REPORT_DIR)
     ap.add_argument("--policy", default="tp",
                 choices=["tp", "dp_only", "tp_rep"])
+    ap.add_argument("--conv", default=None,
+                    choices=["tp", "dp_only", "spatial"],
+                    help="compile the mesh-parallel conv autoencoder cell "
+                         "under this conv_parallel policy instead of the "
+                         "LM cells")
     ap.add_argument("--window-skip", action="store_true")
     ap.add_argument("--tag", default="",
                     help="suffix for the report file (perf iterations)")
     args = ap.parse_args()
+
+    if args.conv:
+        run_conv_cell(args.conv, multi_pod=args.multi_pod,
+                      report_dir=args.report_dir, tag=args.tag)
+        return
 
     cells = []
     if args.all:

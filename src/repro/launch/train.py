@@ -16,6 +16,7 @@ Features exercised here (and by examples/ + tests):
 from __future__ import annotations
 
 import argparse
+import contextlib
 import time
 import warnings
 
@@ -73,6 +74,13 @@ def main(argv=None):
                     choices=["lax", "traditional", "bp_im2col", "bp_phase",
                              "pallas"],
                     help="DEPRECATED: uniform spelling of --conv-policy")
+    ap.add_argument("--conv-mesh", default=None,
+                    choices=["tp", "dp_only", "spatial"],
+                    help="mesh-parallel conv lowering over this host's "
+                         "devices (repro.dist.conv_parallel): batch/"
+                         "channel/spatial sharding with halo exchange; "
+                         "layers the mesh cannot shard fall back with a "
+                         "recorded reason")
     ap.add_argument("--autotune", default=None,
                     choices=["off", "measure", "cached"],
                     help="measured autotuning of the Pallas tile plans "
@@ -129,11 +137,19 @@ def main(argv=None):
     opt_cfg = adamw.AdamWConfig(peak_lr=args.lr)
     guard_cfg = TS.GuardConfig(clip_after=args.guard_clip_after) \
         if args.guard else None
+    mesh_ctx = contextlib.nullcontext()
+    if args.conv_mesh:
+        from repro.dist import set_activation_policy, sharding
+        from repro.launch.mesh import make_host_mesh
+        mesh = make_host_mesh()
+        set_activation_policy(sharding.batch_axes(mesh, args.conv_mesh))
+        mesh_ctx = mesh                 # with mesh: the step traces sharded
     step_fn = jax.jit(TS.make_train_step(
         cfg, opt_cfg, total_steps=args.steps,
         warmup=max(1, args.steps // 20), accum_steps=args.accum,
         conv_policy=resolve_conv_policy_args(args.conv_policy,
                                              args.conv_mode),
+        conv_mesh=args.conv_mesh,
         guard=guard_cfg))
 
     start_step = 0
@@ -164,8 +180,9 @@ def main(argv=None):
         t0 = time.perf_counter()
         inject.set_step(step)
         batch = jax.tree.map(jnp.asarray, make_batch(cfg, dcfg, step))
-        params, opt_state, metrics = step_fn(params, opt_state, batch,
-                                             jnp.int32(step))
+        with mesh_ctx:                  # ambient mesh for the sharded trace
+            params, opt_state, metrics = step_fn(params, opt_state, batch,
+                                                 jnp.int32(step))
         loss = float(metrics["loss"])
         losses.append(loss)
         dt = time.perf_counter() - t0

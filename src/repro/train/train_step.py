@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
+from repro.dist import conv_parallel
 from repro.ft import inject
 from repro.models import model as M
 from repro.optim import adamw, schedule
@@ -52,6 +53,7 @@ def make_train_step(cfg: ArchConfig, opt_cfg: adamw.AdamWConfig,
                     accum_steps: int = 1,
                     compress_grads: bool = False,
                     conv_policy=None,
+                    conv_mesh=None,
                     conv_mode: str | None = None,
                     loss: Callable | None = None,
                     guard: GuardConfig | bool | None = None) -> Callable:
@@ -65,6 +67,14 @@ def make_train_step(cfg: ArchConfig, opt_cfg: adamw.AdamWConfig,
     jax.grad inside this step then dispatches each conv pass through the
     per-pass engines via the conv2d custom_vjp, so one training step can
     mix engines across forward / input-grad / weight-grad.
+
+    conv_mesh: a ``repro.dist.ConvParallel`` or a sharding policy name
+    (``"tp"`` / ``"dp_only"`` / ``"spatial"``) -- every conv traced inside
+    the step then lowers through ``repro.dist.conv_parallel``'s sharded
+    shard_map passes against the mesh active at trace time (halo exchange
+    for spatial shards, per-pass psum placement).  Layers the mesh cannot
+    shard fall back to the single-device path with the reason recorded in
+    ``dispatch_events``.  None (the default) leaves convs unsharded.
 
     conv_mode: DEPRECATED uniform spelling of the same override.
 
@@ -106,30 +116,35 @@ def make_train_step(cfg: ArchConfig, opt_cfg: adamw.AdamWConfig,
         opt_in = opt_state            # pre-step state (the compress block
         # rebinds opt_state; the guard's skip-select must compare against
         # what actually entered the step)
-        if accum_steps == 1:
-            (loss_val, metrics), grads = jax.value_and_grad(
-                loss, has_aux=True)(params, batch, cfg)
-        else:
-            # Microbatch accumulation: batch dims split on the leading axis.
-            def split(x):
-                b = x.shape[0]
-                return x.reshape(accum_steps, b // accum_steps, *x.shape[1:])
-            micro = jax.tree.map(split, batch)
+        with conv_parallel.conv_mesh(conv_mesh):
+            # Applies at trace time, exactly like conv_policy: the convs
+            # inside value_and_grad lower onto shard_map while this step
+            # is being traced (a jit cache hit re-uses the sharded graph).
+            if accum_steps == 1:
+                (loss_val, metrics), grads = jax.value_and_grad(
+                    loss, has_aux=True)(params, batch, cfg)
+            else:
+                # Microbatch accumulation: batch split on the leading axis.
+                def split(x):
+                    b = x.shape[0]
+                    return x.reshape(accum_steps, b // accum_steps,
+                                     *x.shape[1:])
+                micro = jax.tree.map(split, batch)
 
-            def acc_fn(carry, mb):
-                g_acc, l_acc = carry
-                (l, m), g = jax.value_and_grad(
-                    loss, has_aux=True)(params, mb, cfg)
-                g_acc = jax.tree.map(jnp.add, g_acc, g)
-                return (g_acc, l_acc + l), m
+                def acc_fn(carry, mb):
+                    g_acc, l_acc = carry
+                    (l, m), g = jax.value_and_grad(
+                        loss, has_aux=True)(params, mb, cfg)
+                    g_acc = jax.tree.map(jnp.add, g_acc, g)
+                    return (g_acc, l_acc + l), m
 
-            zero_g = jax.tree.map(
-                lambda p: jnp.zeros(p.shape, jnp.float32), params)
-            (grads, loss_val), ms = jax.lax.scan(
-                acc_fn, (zero_g, jnp.zeros((), jnp.float32)), micro)
-            grads = jax.tree.map(lambda g: g / accum_steps, grads)
-            loss_val = loss_val / accum_steps
-            metrics = jax.tree.map(lambda x: x.mean(), ms)
+                zero_g = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params)
+                (grads, loss_val), ms = jax.lax.scan(
+                    acc_fn, (zero_g, jnp.zeros((), jnp.float32)), micro)
+                grads = jax.tree.map(lambda g: g / accum_steps, grads)
+                loss_val = loss_val / accum_steps
+                metrics = jax.tree.map(lambda x: x.mean(), ms)
 
         # Fault injection on the gradient VALUES must live in-graph: the
         # armed steps are read at trace time, the step comparison runs on
