@@ -44,6 +44,13 @@ regressions fail (shared-CPU wall-clock is long-tailed).  Absolute
 timings are recorded for information but never gated -- they are not
 portable across machines.  The committed ``BENCH_serve.json`` is a
 ``--tiny`` record; CI runs ``--tiny --compare BENCH_serve.json``.
+
+``--trace PATH`` / ``--metrics PATH`` switch the telemetry stack on
+(``repro.obs``) for the measured run: the trace carries the
+serve:prefill / serve:insert / serve:decode span timeline of BOTH
+engines, the metrics JSONL a line per decode tick.  The run then also
+asserts the obs report is consistent (legacy counters == bus views)
+and that serve spans were actually traced.
 """
 
 from __future__ import annotations
@@ -279,8 +286,18 @@ def main():
                     help="allowed relative drift of the continuous/static "
                          "ratios for --compare (structural gates are "
                          "tolerance-free)")
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="enable telemetry and write a Perfetto "
+                         "trace_event JSON of both engines' span timeline")
+    ap.add_argument("--metrics", metavar="PATH", default=None,
+                    help="enable telemetry and stream per-decode-tick "
+                         "metrics JSONL to PATH")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    if args.trace or args.metrics:
+        from repro.core.config import config
+        config.update(telemetry=True, trace_path=args.trace,
+                      metrics_path=args.metrics)
     wl = TINY_WORKLOAD if args.tiny else WORKLOAD
     record = run(wl, seed=args.seed)
     _print_table(record)
@@ -324,6 +341,17 @@ def main():
             raise SystemExit(1)
         print(f"no regression vs {args.compare} "
               f"(tolerance {args.tolerance:.0%})", file=sys.stderr)
+    if args.trace or args.metrics:
+        from repro import obs
+        rep = obs.finalize()
+        print(f"obs: {rep['events_total']} events {rep['events_by_kind']} "
+              f"trace={rep['trace_file']} "
+              f"metrics={rep['metrics']['lines']} lines", file=sys.stderr)
+        assert rep["consistent"], (
+            "telemetry divergence: " + "; ".join(rep["divergences"]))
+        if args.trace:
+            assert rep["trace"]["spans_by_prefix"].get("serve", 0) > 0, \
+                "telemetry on but no serve spans were traced"
 
 
 if __name__ == "__main__":

@@ -27,6 +27,7 @@ that routes a layer off pallas does not break the drill).  This is the CI
 """
 
 import argparse
+import json
 import os
 import sys
 
@@ -39,6 +40,7 @@ import numpy as np
 
 from train_cnn_bp import init_params, make_model, synthetic_task
 
+from repro import obs
 from repro.core import conv
 from repro.core.config import config
 from repro.core.convspec import ConvSpec
@@ -75,13 +77,27 @@ def main():
     ap.add_argument("--steps", type=int, default=14)
     ap.add_argument("--batch", type=int, default=32)
     ap.add_argument("--lr", type=float, default=0.05)
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="enable telemetry and write a Perfetto trace_event "
+                         "JSON; the drill then also asserts the degradation "
+                         "arc is on the obs bus and the conv spans carry "
+                         "skip_ratio/bytes_moved annotations")
+    ap.add_argument("--metrics", default=None, metavar="PATH",
+                    help="enable telemetry and stream per-step metrics "
+                         "JSONL to PATH")
     args = ap.parse_args()
     assert args.steps >= 8, "the fault timeline needs at least 8 steps"
 
     conv.QUARANTINE_PROBE_AFTER = 2   # arc: fail@3, skip@4-5, probe@6
-    conv.reset_dispatch_events()
-    config.update(fault_spec=FAULT_SPEC, fault_seed=0)
-    inject.reset_events()
+    config.update(fault_spec=FAULT_SPEC, fault_seed=0,
+                  **{k: v for k, v in
+                     (("telemetry", bool(args.trace or args.metrics) or None),
+                      ("trace_path", args.trace),
+                      ("metrics_path", args.metrics))
+                     if v is not None})
+    # One reset covering EVERY introspection surface (dispatch events,
+    # policy decisions, quarantine, fired faults, the obs bus/trace).
+    obs.reset_all()
 
     n_pallas = expected_pallas_passes(args.batch)
     n_total = sum(n_pallas.values())
@@ -113,6 +129,9 @@ def main():
         else:
             params = jax.tree.map(lambda p, gg: p - args.lr * gg, params, g)
             losses.append(float(loss))
+        obs.metrics.train_step(step, {"loss": float(loss),
+                                      "grad_norm": gnorm,
+                                      "guard_bad": float(bad)})
         if step % 2 == 0 or step == args.steps - 1:
             print(f"[chaos] step={step:3d} loss={float(loss):.4f}")
 
@@ -158,6 +177,37 @@ def main():
         params = jax.tree.map(lambda p, gg: p - args.lr * gg, params, g)
     assert inject.fired_events() == [], inject.fired_events()
     assert np.isfinite(float(loss))
+
+    # --- the same arc must be on the obs bus ------------------------------
+    if obs.enabled():
+        rep = obs.finalize()
+        # Every legacy counter agrees with its bus-backed view -- including
+        # the degrade -> quarantined -> probe -> recovered sequence.
+        assert rep["consistent"], (
+            "telemetry divergence: " + "; ".join(rep["divergences"]))
+        bus = obs.events.counters("dispatch")
+        assert bus == conv.dispatch_events(), (bus, conv.dispatch_events())
+        for p in PASSES:
+            if n_pallas[p] == 0:
+                continue
+            for arc in (f"{p}:pallas->bp_phase", f"{p}:pallas:quarantined",
+                        f"{p}:pallas:probe", f"{p}:pallas:recovered"):
+                assert bus.get(arc, 0) > 0, (arc, bus)
+        if args.trace:
+            trace_doc = json.load(open(args.trace))
+            conv_spans = [e for e in trace_doc["traceEvents"]
+                          if e["ph"] == "B" and e["name"].startswith("conv:")]
+            assert conv_spans, "no conv dispatch spans in the trace"
+            for span in conv_spans:
+                assert "skip_ratio" in span["args"] and \
+                    "bytes_moved" in span["args"], span
+        if args.metrics:
+            lines = [json.loads(ln) for ln in open(args.metrics)]
+            assert len(lines) >= args.steps and \
+                all(ln["kind"] == "train_step" for ln in lines), len(lines)
+        print(f"[chaos] obs ok: {rep['events_total']} bus events, "
+              f"{rep['trace']['events']} trace events, "
+              f"{rep['metrics']['lines']} metrics lines")
 
     print(f"[chaos] ok: {n_total} pallas passes degraded and recovered, "
           f"1 NaN step dropped, final loss {losses[-1]:.4f}, "

@@ -104,14 +104,25 @@ def main():
                     help="arm the fault injector (repro.config.fault_spec), "
                          "e.g. 'pallas.*:raise@step3' -- see "
                          "examples/train_chaos.py for the full chaos drill")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="enable telemetry and write a Perfetto trace_event "
+                         "JSON (repro.obs) to PATH")
+    ap.add_argument("--metrics", default=None, metavar="PATH",
+                    help="enable telemetry and stream per-step metrics "
+                         "JSONL to PATH")
     args = ap.parse_args()
     if args.autotune is not None or args.plan_cache_dir is not None \
-            or args.fault_spec is not None:
+            or args.fault_spec is not None or args.trace is not None \
+            or args.metrics is not None:
         from repro.core.config import config
         config.update(**{k: v for k, v in
                          (("autotune", args.autotune),
                           ("plan_cache_dir", args.plan_cache_dir),
-                          ("fault_spec", args.fault_spec))
+                          ("fault_spec", args.fault_spec),
+                          ("telemetry", bool(args.trace or args.metrics)
+                           or None),
+                          ("trace_path", args.trace),
+                          ("metrics_path", args.metrics))
                          if v is not None})
     if args.mode is not None:
         warnings.warn("--mode is deprecated; use --policy",
@@ -121,18 +132,24 @@ def main():
                              "--mode, not both")
     policy = args.policy or args.mode or "bp_phase"
 
+    from repro import obs
+
     rng = np.random.RandomState(0)
     _, loss_fn = make_model(policy)
     params = init_params()
     grad_fn = jax.jit(jax.value_and_grad(loss_fn))
     t0 = time.perf_counter()
     for step in range(args.steps):
+        ts = time.perf_counter()
         if args.fault_spec:
             from repro.ft import inject
             inject.set_step(step)
         x, y = synthetic_task(rng, args.batch)
-        loss, g = grad_fn(params, x, y)
-        params = jax.tree.map(lambda p, gg: p - args.lr * gg, params, g)
+        with obs.trace.span("train:step", step=step):
+            loss, g = grad_fn(params, x, y)
+            params = jax.tree.map(lambda p, gg: p - args.lr * gg, params, g)
+        obs.metrics.train_step(step, {"loss": float(loss)},
+                               step_s=time.perf_counter() - ts)
         if step % 20 == 0 or step == args.steps - 1:
             print(f"[{policy}] step={step:4d} loss={float(loss):.4f}")
     dt = time.perf_counter() - t0
@@ -141,6 +158,20 @@ def main():
     acc = float((jnp.argmax(fwd(params, xe), -1) == ye).mean())
     print(f"[{policy}] done in {dt:.1f}s  eval_acc={acc:.3f}")
     assert acc > args.acc_floor, "training failed to learn the synthetic task"
+    if obs.enabled():
+        rep = obs.finalize()
+        print(f"[{policy}] obs: {rep['events_total']} events "
+              f"{rep['events_by_kind']} trace={rep['trace_file']} "
+              f"metrics={rep['metrics']['lines']} lines")
+        # The CI obs lane's divergence gate: every legacy counter must
+        # agree with its bus-backed view.
+        assert rep["consistent"], (
+            "telemetry divergence: " + "; ".join(rep["divergences"]))
+        if args.trace:
+            assert rep["trace"]["spans_by_prefix"].get("conv", 0) > 0, \
+                "telemetry on but no conv dispatch spans were traced"
+        if args.metrics:
+            assert rep["metrics"]["lines"] >= args.steps, rep["metrics"]
 
 
 if __name__ == "__main__":

@@ -1,0 +1,82 @@
+#!/usr/bin/env python
+"""Docs-vs-code gate: the event taxonomy in ``docs/OBSERVABILITY.md``
+must agree with the bus registry (``repro.obs.events.KINDS``).
+
+The taxonomy is the markdown table whose header row is exactly
+
+    | kind | emitted by | meaning |
+
+Every registered kind must have a row, every row must name a registered
+kind, and the "emitted by" cell must match the registry's source string
+verbatim (the free-form "meaning" column is not machine-checked).
+
+Run from the repo root (CI docs lane + tier-1 test):
+
+    PYTHONPATH=src python scripts/check_obs_events.py [root]
+"""
+
+from __future__ import annotations
+
+import pathlib
+import sys
+
+HEADER = ("kind", "emitted by", "meaning")
+
+
+def _cells(line: str) -> list[str]:
+    return [c.strip().strip("`") for c in line.strip().strip("|").split("|")]
+
+
+def parse_taxonomy(text: str) -> dict[str, str]:
+    """kind -> "emitted by" cell, from the first table with HEADER."""
+    lines = text.splitlines()
+    rows: dict[str, str] = {}
+    for i, line in enumerate(lines):
+        if tuple(_cells(line)) != HEADER:
+            continue
+        for row in lines[i + 2:]:            # skip the |---| separator
+            if not row.strip().startswith("|"):
+                break
+            cells = _cells(row)
+            if len(cells) != len(HEADER) or set(cells[0]) <= {"-"}:
+                continue
+            rows[cells[0]] = cells[1]
+        return rows
+    raise SystemExit(
+        "docs/OBSERVABILITY.md: event-taxonomy header row "
+        f"{' | '.join(HEADER)!r} not found")
+
+
+def main(argv: list[str]) -> int:
+    root = pathlib.Path(argv[1]) if len(argv) > 1 else \
+        pathlib.Path(__file__).resolve().parent.parent
+    sys.path.insert(0, str(root / "src"))
+    from repro.obs.events import KINDS
+    doc_path = root / "docs" / "OBSERVABILITY.md"
+    documented = parse_taxonomy(doc_path.read_text(encoding="utf-8"))
+    problems = []
+    for kind, (source, _descr) in KINDS.items():
+        if kind not in documented:
+            problems.append(f"kind {kind!r} missing from the taxonomy")
+        elif documented[kind] != source:
+            problems.append(
+                f"kind {kind!r}: documented emitter {documented[kind]!r} "
+                f"but the registry declares {source!r}")
+    for kind in documented:
+        if kind not in KINDS:
+            problems.append(
+                f"taxonomy documents unregistered kind {kind!r} "
+                "(removed or renamed?)")
+    if problems:
+        print(f"{doc_path.relative_to(root)} event taxonomy disagrees "
+              "with repro.obs.events.KINDS:", file=sys.stderr)
+        for p in problems:
+            print("  " + p, file=sys.stderr)
+        return 1
+    print(f"ok: {doc_path.relative_to(root)} taxonomy matches "
+          f"{len(documented)} registered event kinds")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv))

@@ -1,0 +1,163 @@
+#!/usr/bin/env python
+"""Validate a ``repro.obs.trace`` export: Perfetto-loadable trace_event
+JSON with balanced, properly nested spans, plus (optionally) a metrics
+JSONL stream.
+
+Checks, all hard failures:
+
+  * the file is a JSON object with a ``traceEvents`` list;
+  * every event carries ``name`` / ``ph`` / ``pid`` / ``tid`` / ``ts``
+    with ``ph`` one of B/E (the only phases the tracer emits);
+  * per ``(pid, tid)`` lane, B/E events BALANCE and NEST: every E closes
+    the most recent open B of the same name, and nothing stays open;
+  * timestamps never run backwards within a lane;
+  * every ``conv:*`` dispatch span carries the paper-facing annotations
+    ``skip_ratio`` and ``bytes_moved`` in its ``args``;
+  * ``--require-span SUBSTR`` (repeatable): at least one B event whose
+    name contains SUBSTR exists;
+  * ``--metrics FILE``: every line parses as JSON with ``ts`` + ``kind``;
+  * ``--require-metrics-kind KIND`` (repeatable): at least one metrics
+    line of that kind exists.
+
+Run from the repo root (CI obs lane):
+
+    python scripts/validate_trace.py out.json \
+        --require-span conv: --metrics m.jsonl \
+        --require-metrics-kind train_step
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+REQUIRED_KEYS = ("name", "ph", "pid", "tid", "ts")
+
+
+def validate_trace(doc: dict) -> tuple[list[str], dict]:
+    """Returns (problems, stats).  ``doc`` is the parsed trace file."""
+    problems: list[str] = []
+    events = doc.get("traceEvents")
+    if not isinstance(events, list):
+        return (["top-level 'traceEvents' missing or not a list"], {})
+    stacks: dict[tuple, list[dict]] = {}
+    last_ts: dict[tuple, float] = {}
+    b_names: list[str] = []
+    for i, e in enumerate(events):
+        missing = [k for k in REQUIRED_KEYS if k not in e]
+        if missing:
+            problems.append(f"event #{i} missing keys {missing}: {e}")
+            continue
+        if e["ph"] not in ("B", "E"):
+            problems.append(f"event #{i} has phase {e['ph']!r} "
+                            "(tracer only emits B/E)")
+            continue
+        lane = (e["pid"], e["tid"])
+        if e["ts"] < last_ts.get(lane, float("-inf")):
+            problems.append(
+                f"event #{i} ({e['name']!r}): ts runs backwards in lane "
+                f"{lane}")
+        last_ts[lane] = e["ts"]
+        stack = stacks.setdefault(lane, [])
+        if e["ph"] == "B":
+            stack.append(e)
+            b_names.append(e["name"])
+            if e["name"].startswith("conv:"):
+                args = e.get("args", {})
+                for key in ("skip_ratio", "bytes_moved"):
+                    if key not in args:
+                        problems.append(
+                            f"conv span {e['name']!r} (event #{i}) lacks "
+                            f"the {key!r} annotation: args={args}")
+        else:
+            if not stack:
+                problems.append(
+                    f"event #{i}: E {e['name']!r} with no open span in "
+                    f"lane {lane}")
+                continue
+            top = stack.pop()
+            if top["name"] != e["name"]:
+                problems.append(
+                    f"event #{i}: E {e['name']!r} closes B "
+                    f"{top['name']!r} (spans must nest)")
+    for lane, stack in stacks.items():
+        if stack:
+            problems.append(
+                f"lane {lane}: {len(stack)} span(s) left open: "
+                f"{[s['name'] for s in stack]}")
+    return problems, {"events": len(events), "b_names": b_names}
+
+
+def validate_metrics(path: str) -> tuple[list[str], list[dict]]:
+    problems: list[str] = []
+    lines: list[dict] = []
+    with open(path) as f:
+        for i, raw in enumerate(f):
+            raw = raw.strip()
+            if not raw:
+                continue
+            try:
+                rec = json.loads(raw)
+            except json.JSONDecodeError as e:
+                problems.append(f"{path}:{i + 1}: not JSON ({e})")
+                continue
+            for key in ("ts", "kind"):
+                if key not in rec:
+                    problems.append(f"{path}:{i + 1}: missing {key!r}")
+            lines.append(rec)
+    if not lines:
+        problems.append(f"{path}: no metrics lines")
+    return problems, lines
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("trace", help="trace_event JSON written by "
+                                  "repro.obs.trace.export")
+    ap.add_argument("--require-span", action="append", default=[],
+                    metavar="SUBSTR",
+                    help="fail unless a B span whose name contains SUBSTR "
+                         "exists (repeatable)")
+    ap.add_argument("--metrics", metavar="FILE", default=None,
+                    help="also validate this metrics JSONL stream")
+    ap.add_argument("--require-metrics-kind", action="append", default=[],
+                    metavar="KIND",
+                    help="fail unless a metrics line of this kind exists "
+                         "(repeatable)")
+    args = ap.parse_args(argv)
+
+    with open(args.trace) as f:
+        doc = json.load(f)
+    problems, stats = validate_trace(doc)
+    for sub in args.require_span:
+        if not any(sub in n for n in stats.get("b_names", [])):
+            problems.append(
+                f"{args.trace}: no span matching {sub!r} "
+                f"(spans: {sorted(set(stats.get('b_names', [])))})")
+    n_metrics = 0
+    if args.metrics:
+        mproblems, lines = validate_metrics(args.metrics)
+        problems.extend(mproblems)
+        n_metrics = len(lines)
+        kinds = {rec.get("kind") for rec in lines}
+        for kind in args.require_metrics_kind:
+            if kind not in kinds:
+                problems.append(
+                    f"{args.metrics}: no line of kind {kind!r} "
+                    f"(kinds: {sorted(k for k in kinds if k)})")
+    if problems:
+        print(f"INVALID: {args.trace}", file=sys.stderr)
+        for p in problems:
+            print("  " + p, file=sys.stderr)
+        return 1
+    msg = f"ok: {args.trace}: {stats['events']} events, " \
+          f"{len(stats['b_names'])} spans, all balanced and nested"
+    if args.metrics:
+        msg += f"; {args.metrics}: {n_metrics} metrics lines"
+    print(msg)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -42,6 +42,8 @@ import jax
 import numpy as np
 
 from repro.ft.inject import fault_point
+from repro.obs import events as obs_events
+from repro.obs import trace as obs_trace
 
 _STEP_DIR = re.compile(r"step_(\d+)")
 
@@ -135,8 +137,9 @@ def save(ckpt_dir: str, step: int, tree: Any, *, keep: int = 3,
     leaves = [(".".join(path), np.asarray(leaf))
               for path, leaf in _leaf_paths(tree)]
 
-    def _write():
+    def _write_impl():
         fault_point("ckpt.write")
+        obs_events.emit("ckpt", "write", step=step, blocking=blocking)
         d = os.path.join(ckpt_dir, f"step_{step:08d}")
         tmp = d + ".tmp"
         try:
@@ -164,6 +167,14 @@ def save(ckpt_dir: str, step: int, tree: Any, *, keep: int = 3,
             shutil.rmtree(d)
         os.rename(tmp, d)
         _rotate(ckpt_dir, keep)
+
+    def _write():
+        # The span runs on the writer thread for async saves, so the trace
+        # shows checkpoint I/O overlapping the training steps on its own
+        # tid lane.
+        with obs_trace.span("ckpt:write", step=step, leaves=len(leaves),
+                            blocking=blocking):
+            _write_impl()
 
     if blocking:
         _write()
@@ -261,6 +272,7 @@ def restore(ckpt_dir: str, step: Optional[int] = None, *,
     never falls back -- a bad requested checkpoint raises immediately.
     """
     fault_point("ckpt.read")
+    obs_events.emit("ckpt", "restore", step=step)
     steps = latest_steps(ckpt_dir)
     if not steps:
         return None, None

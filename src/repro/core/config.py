@@ -162,10 +162,28 @@ FIELDS: dict[str, _Field] = {
                          _check_fault_spec),
     # Seed of the injector's probability stream (the '~pP' rules).
     "fault_seed": _Field("REPRO_FAULT_SEED", 0, int, _check_int_any),
+    # Unified telemetry (repro.obs): the master switch for the structured
+    # event bus, the span tracer and the metrics stream.  Off (the
+    # default) is today's zero-overhead behavior -- every obs hook is a
+    # single ``is None`` check, the ft.inject disarmed idiom.
+    "telemetry": _Field("REPRO_TELEMETRY", False, _parse_bool, _check_bool),
+    # Perfetto/Chrome trace_event JSON output path (repro.obs.trace).
+    # Spans are only recorded when ``telemetry`` is on AND a path is set;
+    # the file is written by ``repro.obs.finalize()`` / ``trace.export()``.
+    "trace_path": _Field("REPRO_TRACE_PATH", None, _parse_optional_str,
+                         _check_optional_str),
+    # Per-step metrics JSONL output path (repro.obs.metrics); one line per
+    # training step / serve tick, flushed as written.  Active only when
+    # ``telemetry`` is on AND a path is set.
+    "metrics_path": _Field("REPRO_METRICS_PATH", None, _parse_optional_str,
+                           _check_optional_str),
 }
 
 #: fields whose change must re-arm the fault injector.
 _FAULT_FIELDS = ("fault_spec", "fault_seed")
+
+#: fields whose change must re-sync the telemetry subsystem.
+_OBS_FIELDS = ("telemetry", "trace_path", "metrics_path")
 
 
 def _invalidate_plan_caches() -> None:
@@ -191,6 +209,19 @@ def _sync_fault_injector(import_now: bool = False) -> None:
         inject = importlib.import_module("repro.ft.inject")
     if inject is not None:
         inject.sync_from_config()
+
+
+def _sync_obs(import_now: bool = False) -> None:
+    """Re-sync ``repro.obs`` (event bus / tracer / metrics stream) from the
+    current telemetry fields.  Lazy by default (same no-cycle rule as the
+    plan caches); ``import_now`` forces the import so an explicit
+    ``update(telemetry=True)`` activates the bus immediately."""
+    obs = sys.modules.get("repro.obs")
+    if obs is None and import_now:
+        import importlib
+        obs = importlib.import_module("repro.obs")
+    if obs is not None:
+        obs.sync_from_config()
 
 
 class GlobalConfig:
@@ -233,6 +264,8 @@ class GlobalConfig:
                 _invalidate_plan_caches()
             if name in _FAULT_FIELDS:
                 _sync_fault_injector()
+            if name in _OBS_FIELDS:
+                _sync_obs()
         return self._values[name]
 
     def snapshot(self) -> dict[str, Any]:
@@ -254,7 +287,7 @@ class GlobalConfig:
             raise ValueError(
                 f"unknown config field(s) {sorted(unknown)}; fields: "
                 f"{tuple(FIELDS)}")
-        invalidate = resync_faults = False
+        invalidate = resync_faults = resync_obs = False
         for name, value in kw.items():
             f = FIELDS[name]
             value = f.check(value)
@@ -262,6 +295,8 @@ class GlobalConfig:
                 invalidate = True
             if name in _FAULT_FIELDS and self._values[name] != value:
                 resync_faults = True
+            if name in _OBS_FIELDS and self._values[name] != value:
+                resync_obs = True
             self._values[name] = value
             # An explicit update() supersedes the env var: re-snapshot so a
             # subsequent read does not "restore" the stale env value.
@@ -270,6 +305,8 @@ class GlobalConfig:
             _invalidate_plan_caches()
         if resync_faults:
             _sync_fault_injector(import_now=True)
+        if resync_obs:
+            _sync_obs(import_now=True)
 
     @contextlib.contextmanager
     def override(self, **kw):

@@ -94,6 +94,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import bpim2col, im2col_ref, phase_decomp
+from repro.obs import events as obs_events
+from repro.obs import trace as obs_trace
 from repro.core.convspec import (AUTO, ConvSpec, ConvTransposeSpec,
                                  EnginePolicy)
 from repro.core.im2col_ref import ConvDims, rot180, zero_insert
@@ -435,6 +437,9 @@ def reset_dispatch_events() -> None:
     POLICY_DECISIONS.clear()
     RUNTIME_FAILURES.clear()
     _QUARANTINE.clear()
+    # Keep the bus-backed view (obs.events.counters("dispatch")) in lockstep
+    # with the legacy dict under every reset pattern (no-op when off).
+    obs_events.drop("dispatch")
 
 
 def _paper_geometry_gap(d: ConvDims) -> str | None:
@@ -578,6 +583,7 @@ def clear_quarantine() -> None:
 
 def _record_event(key: str) -> None:
     DISPATCH_EVENTS[key] = DISPATCH_EVENTS.get(key, 0) + 1
+    obs_events.emit("dispatch", key)
 
 
 def _dims_key(d: ConvDims) -> tuple:
@@ -648,7 +654,8 @@ def _execute(pass_name: str, requested: str, d: ConvDims, transposed: bool,
             probing = True
             _record_event(f"{pkey}:{cand}:probe")
         try:
-            out = run(ENGINES[cand])
+            with obs_trace.dispatch_span(pkey, cand, d):
+                out = run(ENGINES[cand])
         except Exception as e:
             if first_exc is None:
                 first_exc = e

@@ -48,10 +48,14 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
+import math
+
 from repro.core import conv as C
 from repro.core.convspec import ConvSpec, ConvTransposeSpec
 from repro.kernels.ops import shard_halo
 from repro.dist.constraints import _active_mesh
+from repro.obs import events as obs_events
+from repro.obs import trace as obs_trace
 
 #: conv-role names a plan can shard (event tags join them with "+").
 ROLES = ("data", "h", "w", "cin", "cout")
@@ -295,27 +299,41 @@ def plan_conv_sharding(x_shape, w_shape, spec, par: ConvParallel,
 # Halo exchange: gather (fwd/wgrad) and its transpose, scatter-add (dgrad)
 # ---------------------------------------------------------------------------
 
+def _record_halo(op: str, axis_name: str, dim: int, send) -> None:
+    """One bus event per halo ``ppermute`` send.  Runs at TRACE time, where
+    shape/dtype are static, so the per-exchange byte count is exact for
+    the lowered collective (per shard) and costs nothing at run time."""
+    if obs_events.enabled():
+        nbytes = int(math.prod(send.shape)) * send.dtype.itemsize
+        obs_events.emit("halo", f"{op}:{axis_name}:dim{dim}",
+                        bytes=nbytes, shape=[int(s) for s in send.shape])
+
+
 def _halo_gather(x, axis_name: str, n: int, lo: int, hi: int, dim: int):
     """Extend a local block with ``lo`` rows from the low neighbor and
     ``hi`` from the high neighbor along ``dim``.  Unnamed ``ppermute``
     destinations receive zeros, so edge shards are extended with exactly
     the zero rows the global padding supplies -- no separate pad path.
     ``hi < 0`` crops instead (adjacent windows do not reach those rows)."""
-    parts = []
-    if lo > 0:
-        send = jax.lax.slice_in_dim(x, x.shape[dim] - lo, x.shape[dim],
-                                    axis=dim)
-        parts.append(jax.lax.ppermute(
-            send, axis_name, [(j, j + 1) for j in range(n - 1)]))
-    parts.append(x)
-    if hi > 0:
-        send = jax.lax.slice_in_dim(x, 0, hi, axis=dim)
-        parts.append(jax.lax.ppermute(
-            send, axis_name, [(j, j - 1) for j in range(1, n)]))
-    out = jnp.concatenate(parts, axis=dim) if len(parts) > 1 else x
-    if hi < 0:
-        out = jax.lax.slice_in_dim(out, 0, out.shape[dim] + hi, axis=dim)
-    return out
+    with obs_trace.span("halo:gather", axis=axis_name, dim=dim,
+                        lo=lo, hi=hi, shards=n):
+        parts = []
+        if lo > 0:
+            send = jax.lax.slice_in_dim(x, x.shape[dim] - lo, x.shape[dim],
+                                        axis=dim)
+            _record_halo("gather", axis_name, dim, send)
+            parts.append(jax.lax.ppermute(
+                send, axis_name, [(j, j + 1) for j in range(n - 1)]))
+        parts.append(x)
+        if hi > 0:
+            send = jax.lax.slice_in_dim(x, 0, hi, axis=dim)
+            _record_halo("gather", axis_name, dim, send)
+            parts.append(jax.lax.ppermute(
+                send, axis_name, [(j, j - 1) for j in range(1, n)]))
+        out = jnp.concatenate(parts, axis=dim) if len(parts) > 1 else x
+        if hi < 0:
+            out = jax.lax.slice_in_dim(out, 0, out.shape[dim] + hi, axis=dim)
+        return out
 
 
 def _halo_scatter(x_ext, axis_name: str, n: int, lo: int, hi: int,
@@ -325,28 +343,32 @@ def _halo_scatter(x_ext, axis_name: str, n: int, lo: int, hi: int,
     since seam outputs accumulate contributions from both sides).  Edge
     overhang that ``ppermute`` sends to nobody is dropped -- those are
     gradients of padding zeros."""
-    if hi < 0:
-        pad = [(0, 0)] * x_ext.ndim
-        pad[dim] = (0, -hi)
-        x_ext = jnp.pad(x_ext, pad)
-        hi = 0
-    x = jax.lax.slice_in_dim(x_ext, lo, lo + block, axis=dim)
-    if lo > 0:
-        send = jax.lax.slice_in_dim(x_ext, 0, lo, axis=dim)
-        recv = jax.lax.ppermute(
-            send, axis_name, [(j, j - 1) for j in range(1, n)])
-        pad = [(0, 0)] * x.ndim
-        pad[dim] = (block - lo, 0)
-        x = x + jnp.pad(recv, pad)
-    if hi > 0:
-        send = jax.lax.slice_in_dim(x_ext, lo + block, lo + block + hi,
-                                    axis=dim)
-        recv = jax.lax.ppermute(
-            send, axis_name, [(j, j + 1) for j in range(n - 1)])
-        pad = [(0, 0)] * x.ndim
-        pad[dim] = (0, block - hi)
-        x = x + jnp.pad(recv, pad)
-    return x
+    with obs_trace.span("halo:scatter", axis=axis_name, dim=dim,
+                        lo=lo, hi=hi, shards=n):
+        if hi < 0:
+            pad = [(0, 0)] * x_ext.ndim
+            pad[dim] = (0, -hi)
+            x_ext = jnp.pad(x_ext, pad)
+            hi = 0
+        x = jax.lax.slice_in_dim(x_ext, lo, lo + block, axis=dim)
+        if lo > 0:
+            send = jax.lax.slice_in_dim(x_ext, 0, lo, axis=dim)
+            _record_halo("scatter", axis_name, dim, send)
+            recv = jax.lax.ppermute(
+                send, axis_name, [(j, j - 1) for j in range(1, n)])
+            pad = [(0, 0)] * x.ndim
+            pad[dim] = (block - lo, 0)
+            x = x + jnp.pad(recv, pad)
+        if hi > 0:
+            send = jax.lax.slice_in_dim(x_ext, lo + block, lo + block + hi,
+                                        axis=dim)
+            _record_halo("scatter", axis_name, dim, send)
+            recv = jax.lax.ppermute(
+                send, axis_name, [(j, j + 1) for j in range(n - 1)])
+            pad = [(0, 0)] * x.ndim
+            pad[dim] = (0, block - hi)
+            x = x + jnp.pad(recv, pad)
+        return x
 
 
 def _gather_spatial(x, plan: ConvShardPlan):

@@ -52,6 +52,7 @@ import random
 import re
 
 from repro.core.config import config
+from repro.obs import events as obs_events
 
 #: every registered fault site.  Adding a ``fault_point`` call to a new
 #: failure domain means adding its name here -- the coverage test asserts
@@ -196,6 +197,8 @@ def seen_sites() -> set[str]:
 def reset_events() -> None:
     _FIRED.clear()
     _SEEN.clear()
+    # Keep the bus's fault stream in lockstep with _FIRED (no-op when off).
+    obs_events.drop("fault")
 
 
 def _poison(value):
@@ -241,6 +244,8 @@ def fault_point(name: str, value=None):
         if len(_FIRED) < _MAX_FIRED:
             _FIRED.append({"site": name, "action": rule.action,
                            "step": _STEP, "pattern": rule.pattern})
+            obs_events.emit("fault", name, action=rule.action, step=_STEP,
+                            pattern=rule.pattern)
         if rule.action == "raise":
             raise InjectedFault(name, rule)
         value = _poison(value)
@@ -276,6 +281,8 @@ def nan_factor(step, steps: tuple[int | None, ...]):
         _FIRED.append({"site": "grad.values", "action": "nan",
                        "step": tuple(int(s) for s in steps),
                        "pattern": "<in-graph>"})
+        obs_events.emit("fault", "grad.values", action="nan",
+                        step=[int(s) for s in steps], pattern="<in-graph>")
     return jnp.where(hit, jnp.float32(float("nan")), jnp.float32(1.0))
 
 

@@ -49,6 +49,7 @@ from repro.core.config import config
 from repro.core.im2col_ref import ConvDims
 from repro.ft.inject import InjectedFault, fault_point
 from repro.kernels import ops
+from repro.obs import trace as obs_trace
 
 #: bump when the key layout or entry payload changes; older files are
 #: ignored wholesale (equivalent to a cold cache).
@@ -156,14 +157,17 @@ def measure_plan(role: str, d: ConvDims, plan,
     with ``block_until_ready`` so async dispatch cannot flatter a plan."""
     fault_point("autotune.measure")
     reps = config.autotune_reps if reps is None else reps
-    fn = _run_fn(role, d, plan)
-    for _ in range(max(1, warmup)):
-        jax.block_until_ready(fn())
-    best = float("inf")
-    for _ in range(max(1, reps)):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn())
-        best = min(best, time.perf_counter() - t0)
+    with obs_trace.span(
+            "autotune:measure", role=role, reps=reps,
+            dims=[d.B, d.C, d.H_i, d.W_i, d.N, d.K_h, d.K_w]):
+        fn = _run_fn(role, d, plan)
+        for _ in range(max(1, warmup)):
+            jax.block_until_ready(fn())
+        best = float("inf")
+        for _ in range(max(1, reps)):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())
+            best = min(best, time.perf_counter() - t0)
     return best * 1e6
 
 

@@ -64,6 +64,7 @@ from repro.core.im2col_ref import ConvDims, rot180, zero_insert, zero_pad
 from repro.core import phase_decomp
 from repro.ft.inject import fault_point
 from repro.kernels import tap_gemm as tg
+from repro.obs import events as obs_events
 from repro.kernels.tap_gemm import _cdiv, _taps_halo
 
 _ELEM_BYTES = 4            # budget in f32 elements (worst case)
@@ -75,6 +76,7 @@ PLAN_EVENTS: dict[str, int] = {}
 
 def _count_event(name: str) -> None:
     PLAN_EVENTS[name] = PLAN_EVENTS.get(name, 0) + 1
+    obs_events.emit("plan", name)
 
 
 def plan_events() -> dict[str, int]:
@@ -83,6 +85,8 @@ def plan_events() -> dict[str, int]:
 
 def reset_plan_events() -> None:
     PLAN_EVENTS.clear()
+    # Keep the bus-backed view in lockstep with the legacy dict (no-op off).
+    obs_events.drop("plan")
 
 
 def _canonical(d: ConvDims) -> ConvDims:

@@ -32,6 +32,7 @@ from repro.ft.failures import (GuardState, HeartbeatTable, StragglerDetector,
 from repro.models import model as M
 from repro.optim import adamw
 from repro.train import train_step as TS
+from repro import obs
 
 
 def resolve_conv_policy_args(conv_policy: str | None,
@@ -98,6 +99,13 @@ def main(argv=None):
     ap.add_argument("--fault-spec", default=None,
                     help="arm the fault injector (repro.config.fault_spec), "
                          "e.g. 'pallas.*:raise@step3;grad.values:nan@step5'")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="enable telemetry and write a Chrome/Perfetto "
+                         "trace_event JSON of the run (repro.obs.trace) "
+                         "to PATH")
+    ap.add_argument("--metrics", default=None, metavar="PATH",
+                    help="enable telemetry and stream per-step metrics "
+                         "JSONL (loss/grad_norm/guard/dispatch mix) to PATH")
     guard_group = ap.add_mutually_exclusive_group()
     guard_group.add_argument("--guard", dest="guard", action="store_true",
                              default=True,
@@ -115,7 +123,8 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     if args.autotune is not None or args.plan_cache_dir is not None \
-            or args.fault_spec is not None:
+            or args.fault_spec is not None or args.trace is not None \
+            or args.metrics is not None:
         from repro.core.config import config
         updates = {}
         if args.autotune is not None:
@@ -124,6 +133,10 @@ def main(argv=None):
             updates["plan_cache_dir"] = args.plan_cache_dir
         if args.fault_spec is not None:
             updates["fault_spec"] = args.fault_spec
+        if args.trace is not None:
+            updates.update(telemetry=True, trace_path=args.trace)
+        if args.metrics is not None:
+            updates.update(telemetry=True, metrics_path=args.metrics)
         config.update(**updates)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -180,16 +193,20 @@ def main(argv=None):
         t0 = time.perf_counter()
         inject.set_step(step)
         batch = jax.tree.map(jnp.asarray, make_batch(cfg, dcfg, step))
-        with mesh_ctx:                  # ambient mesh for the sharded trace
-            params, opt_state, metrics = step_fn(params, opt_state, batch,
-                                                 jnp.int32(step))
-        loss = float(metrics["loss"])
+        with obs.trace.span("train:step", step=step):
+            with mesh_ctx:              # ambient mesh for the sharded trace
+                params, opt_state, metrics = step_fn(params, opt_state,
+                                                     batch, jnp.int32(step))
+            loss = float(metrics["loss"])
         losses.append(loss)
         dt = time.perf_counter() - t0
+        obs.metrics.train_step(step, metrics, step_s=dt)
         hb.beat(0)
         straggler.observe([dt])
         if gs is not None and float(metrics.get("guard_bad", 0.0)):
             action = gs.observe(True)
+            obs.events.emit("train", f"guard:{action or 'skip'}", step=step,
+                            streak=gs.bad_streak)
             print(f"[train] step={step} non-finite step dropped "
                   f"(streak={gs.bad_streak}, action={action})", flush=True)
             if action == "rollback":
@@ -224,6 +241,15 @@ def main(argv=None):
     if gs is not None and gs.total_bad:
         print(f"[train] guard: {gs.total_bad} non-finite steps dropped, "
               f"{gs.rollbacks} rollbacks")
+    if obs.enabled():
+        rep = obs.finalize()
+        print(f"[train] obs: {rep['events_total']} events "
+              f"{rep['events_by_kind']} trace={rep['trace_file']} "
+              f"metrics={rep['metrics']['lines']} lines")
+        if not rep["consistent"]:
+            raise SystemExit("[train] telemetry divergence: legacy counters "
+                             "disagree with the bus-backed views: "
+                             + "; ".join(rep["divergences"]))
     print(f"[train] done: first_loss={losses[0]:.4f} "
           f"last_loss={losses[-1]:.4f}")
     return losses

@@ -46,7 +46,11 @@ from repro.configs.base import ArchConfig
 from repro.ft import inject
 from repro.models import model as M
 from repro.models import transformer as T
+from repro.obs import events as obs_events
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.serve import cache as C
+from repro.serve.engine import merged_summary
 from repro.serve.request import Request
 from repro.serve.sampling import make_sampler
 
@@ -115,9 +119,17 @@ class ContinuousEngine:
         req.t_done = self.clock()
         key = req.status if req.status != "ok" else "completed"
         self.counters[key] = self.counters.get(key, 0) + 1
+        latency = req.t_done - req.t_submit
+        obs_events.emit("serve", f"finalize:{key}", engine=self.engine_kind,
+                        rid=req.rid, latency_s=round(latency, 6),
+                        tokens=len(req.out))
+        obs_metrics.record_latency(latency)
 
     def run_summary(self) -> dict:
-        return dict(self.counters)
+        """Flat lifetime summary: counters AND phase stats merged under the
+        shared vocabulary (``serve.engine.SUMMARY_COUNTERS``), so static
+        and continuous summaries diff key-for-key."""
+        return merged_summary(self.engine_kind, self.counters, self.stats)
 
     def free_lanes(self) -> list[int]:
         return [i for i, r in enumerate(self.lanes) if r is None]
@@ -148,16 +160,23 @@ class ContinuousEngine:
                 try:
                     inject.fault_point("serve.prefill")
                     t0 = time.perf_counter()
-                    logits, src = self._prefill(
-                        self.params,
-                        jnp.asarray([req.prompt], jnp.int32))
-                    jax.block_until_ready(logits)
+                    with obs_trace.span("serve:prefill",
+                                        engine=self.engine_kind,
+                                        rid=req.rid,
+                                        plen=len(req.prompt)):
+                        logits, src = self._prefill(
+                            self.params,
+                            jnp.asarray([req.prompt], jnp.int32))
+                        jax.block_until_ready(logits)
                     self.stats["prefill_s"] += time.perf_counter() - t0
                 except Exception:
                     self._finalize(req, "failed")
                     finished.append(req)
                     continue
                 self.counters["admitted"] += 1
+                obs_events.emit("serve", "admit", engine=self.engine_kind,
+                                rid=req.rid, lane=lane,
+                                plen=len(req.prompt))
                 self.stats["prefill_tokens"] += len(req.prompt)
                 tok = self._sample_one(logits)
                 req.out.append(tok)
@@ -172,11 +191,16 @@ class ContinuousEngine:
                 # the decode rate: block here so its full-cache copy is not
                 # charged to the next decode step's timer.
                 t0 = time.perf_counter()
-                self.cache = self._insert(self.cache, src,
-                                          jnp.int32(lane))
-                jax.block_until_ready(self.cache)
+                with obs_trace.span("serve:insert",
+                                    engine=self.engine_kind,
+                                    rid=req.rid, lane=lane):
+                    self.cache = self._insert(self.cache, src,
+                                              jnp.int32(lane))
+                    jax.block_until_ready(self.cache)
                 self.stats["prefill_s"] += time.perf_counter() - t0
                 self.counters["inserts"] += 1
+                obs_events.emit("serve", "insert", engine=self.engine_kind,
+                                rid=req.rid, lane=lane)
                 self.lanes[lane] = req
                 self.lane_pos[lane] = len(req.prompt)
                 self.next_tok[lane] = tok
@@ -201,10 +225,12 @@ class ContinuousEngine:
         self.counters["decode_steps"] += 1
         inject.set_step(self.counters["decode_steps"])
         t0 = time.perf_counter()
-        logits, self.cache = self._decode(
-            self.params, self.cache, jnp.asarray(self.next_tok),
-            jnp.asarray(self.lane_pos))
-        jax.block_until_ready(logits)
+        with obs_trace.span("serve:decode", engine=self.engine_kind,
+                            active=len(active)):
+            logits, self.cache = self._decode(
+                self.params, self.cache, jnp.asarray(self.next_tok),
+                jnp.asarray(self.lane_pos))
+            jax.block_until_ready(logits)
         self.stats["decode_s"] += time.perf_counter() - t0
         self.key, sub = jax.random.split(self.key)
         sampled = np.asarray(self._sample(logits, sub))
@@ -227,6 +253,7 @@ class ContinuousEngine:
             elif (r.deadline_s is not None
                     and now - r.t_submit > r.deadline_s):
                 self._release(i, finished, "timed_out")
+        obs_metrics.serve_tick(self)
         if self.on_step is not None:
             self.on_step(self)
         return True

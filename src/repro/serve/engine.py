@@ -28,13 +28,40 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.models import model as M
 from repro.models import transformer as T
+from repro.obs import events as obs_events
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.serve.request import Request
 from repro.serve.sampling import make_sampler
 
-__all__ = ["Engine", "Request"]
+__all__ = ["Engine", "Request", "SUMMARY_COUNTERS", "merged_summary"]
+
+#: the shared counter vocabulary of BOTH engines' run_summary: every key is
+#: present in every summary (0 when the engine has no such phase -- the
+#: static engine never "inserts", the continuous engine has no "waves"),
+#: so the two engines are directly diffable.
+SUMMARY_COUNTERS = ("completed", "timed_out", "failed", "admitted",
+                    "inserts", "waves", "decode_steps")
+
+
+def merged_summary(engine_kind: str, counters: dict, stats: dict) -> dict:
+    """One FLAT summary dict merging lifetime ``counters`` and phase
+    ``stats`` (prefill_s/decode_s/tokens...), under the shared
+    :data:`SUMMARY_COUNTERS` vocabulary."""
+    out: dict = {"engine_kind": engine_kind}
+    for key in SUMMARY_COUNTERS:
+        out[key] = counters.get(key, 0)
+    for key, val in counters.items():       # engine-specific extras survive
+        out.setdefault(key, val)
+    for key, val in stats.items():
+        out[key] = round(val, 6) if isinstance(val, float) else val
+    return out
 
 
 class Engine:
+    #: introspection anchor mirroring ContinuousEngine.engine_kind, so
+    #: summaries and metrics lines name their producer.
+    engine_kind = "static"
     def __init__(self, cfg: ArchConfig, params, max_batch: int = 4,
                  max_len: int = 256, temperature: float = 0.0,
                  pad_id: int = 0, seed: int = 0, conv_policy=None,
@@ -87,6 +114,11 @@ class Engine:
         req.t_done = self.clock()
         key = req.status if req.status != "ok" else "completed"
         self.counters[key] = self.counters.get(key, 0) + 1
+        latency = req.t_done - req.t_submit
+        obs_events.emit("serve", f"finalize:{key}", engine=self.engine_kind,
+                        rid=req.rid, latency_s=round(latency, 6),
+                        tokens=len(req.out))
+        obs_metrics.record_latency(latency)
 
     def _expire(self, wave: list[Request]) -> None:
         """Finalize overdue requests: keep the tokens generated so far,
@@ -98,9 +130,10 @@ class Engine:
                 self._finalize(r, "timed_out")
 
     def run_summary(self) -> dict:
-        """Counters of the engine's lifetime: completed / timed_out
-        requests, waves run and decode steps executed."""
-        return dict(self.counters)
+        """Flat lifetime summary: the shared counter vocabulary
+        (:data:`SUMMARY_COUNTERS`) merged with the phase ``stats``, keyed
+        identically to the continuous engine so the two are diffable."""
+        return merged_summary(self.engine_kind, self.counters, self.stats)
 
     def _tick(self) -> None:
         if self.on_step is not None:
@@ -108,6 +141,8 @@ class Engine:
 
     def _run_wave(self, wave: list[Request]) -> None:
         self.counters["waves"] += 1
+        obs_events.emit("serve", "wave", engine=self.engine_kind,
+                        size=len(wave))
         b = self.max_batch
         plen = max(len(r.prompt) for r in wave)
         toks = np.full((b, plen), self.pad_id, np.int32)
@@ -117,15 +152,17 @@ class Engine:
         # Lockstep prefill through the decode path.
         logits = None
         t0 = time.perf_counter()
-        for t in range(plen):
-            if all(r.done for r in wave):
-                break
-            logits, cache = self._decode(self.params, cache,
-                                         jnp.asarray(toks[:, t]),
-                                         jnp.int32(t))
-            self._tick()
-        if logits is not None:
-            jax.block_until_ready(logits)
+        with obs_trace.span("serve:prefill", engine=self.engine_kind,
+                            size=len(wave), plen=plen):
+            for t in range(plen):
+                if all(r.done for r in wave):
+                    break
+                logits, cache = self._decode(self.params, cache,
+                                             jnp.asarray(toks[:, t]),
+                                             jnp.int32(t))
+                self._tick()
+            if logits is not None:
+                jax.block_until_ready(logits)
         self.stats["prefill_s"] += time.perf_counter() - t0
         self.stats["prefill_tokens"] += sum(len(r.prompt) for r in wave)
         pos = plen
@@ -155,11 +192,15 @@ class Engine:
             if all(r.done for r in wave):
                 break
             t0 = time.perf_counter()
-            logits, cache = self._decode(self.params, cache,
-                                         jnp.asarray(nxt), jnp.int32(pos))
-            jax.block_until_ready(logits)
+            with obs_trace.span("serve:decode", engine=self.engine_kind,
+                                pos=pos, active=active):
+                logits, cache = self._decode(self.params, cache,
+                                             jnp.asarray(nxt),
+                                             jnp.int32(pos))
+                jax.block_until_ready(logits)
             self.stats["decode_s"] += time.perf_counter() - t0
             self.counters["decode_steps"] += 1
+            obs_metrics.serve_tick(self)
             self._tick()
             pos += 1
         for r in wave:

@@ -29,3 +29,13 @@ import pytest
 @pytest.fixture(scope="session")
 def rng():
     return np.random.RandomState(0)
+
+
+@pytest.fixture(autouse=True)
+def _clean_introspection():
+    """Every test starts with clean introspection state everywhere -- the
+    legacy counters (dispatch/quarantine/plan/fault/checkpoint) and the
+    obs bus/trace/metrics window -- via the one covering reset."""
+    from repro import obs
+    obs.reset_all()
+    yield

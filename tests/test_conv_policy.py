@@ -574,3 +574,29 @@ def test_bench_compare_detects_regressions():
     assert any("case" in p and "missing" in p
                for p in BK.compare_records({"cases": []}, base,
                                            tolerance=0.15))
+    # Telemetry overhead is an ABSOLUTE gate (enabling telemetry must not
+    # slow the compiled step), while the off/on arm columns are exempt
+    # from the baseline-relative wall-clock diff -- their drift is not a
+    # regression, the ratio is the contract.
+    tele_base = {"cases": [{
+        **ok["cases"][0],
+        "timings_us": {"case": "t", "grad_auto_us": 100.0,
+                       "telemetry_off_us": 100.0,
+                       "telemetry_on_us": 101.0,
+                       "telemetry_overhead": 1.01}}]}
+    drifted = {"cases": [{
+        **ok["cases"][0],
+        "timings_us": {"case": "t", "grad_auto_us": 100.0,
+                       "telemetry_off_us": 300.0,     # noisy arms, ok
+                       "telemetry_on_us": 303.0,
+                       "telemetry_overhead": 1.01}}]}
+    assert BK.compare_records(drifted, tele_base, tolerance=0.15) == []
+    slowed = {"cases": [{
+        **ok["cases"][0],
+        "timings_us": {"case": "t", "grad_auto_us": 100.0,
+                       "telemetry_off_us": 100.0,
+                       "telemetry_on_us": 108.0,
+                       "telemetry_overhead": 1.08}}]}
+    assert any("telemetry_overhead" in p
+               for p in BK.compare_records(slowed, tele_base,
+                                           tolerance=0.15))

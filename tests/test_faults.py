@@ -31,17 +31,17 @@ from repro.train import train_step as TS
 
 @pytest.fixture(autouse=True)
 def _disarmed():
-    """Every test starts and ends with the injector disarmed and the
-    dispatch/quarantine/event state clean."""
+    """Every test starts and ends with the injector disarmed and every
+    introspection surface clean (``obs.reset_all`` covers the dispatch/
+    quarantine/plan/fault counters and the obs bus)."""
+    from repro import obs
     saved = config.snapshot()
     config.update(fault_spec=None)
-    inject.reset_events()
-    reset_dispatch_events()
+    obs.reset_all()
     yield
     config.update(**saved)
     config.update(fault_spec=None)
-    inject.reset_events()
-    reset_dispatch_events()
+    obs.reset_all()
 
 
 def _x(b=2):
